@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks: flash / decode attention vs their jnp oracles
+(CPU wall-time; on TPU the same harness reports compiled-kernel timings)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    results = {}
+    b, s, h, kh, hd = 1, 512, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kh, hd), jnp.float32)
+
+    t_ref = _time(jax.jit(lambda *a: flash_attention_ref(*a)), q, k, v)
+    t_pal = _time(lambda *a: flash_attention(*a, interpret=True), q, k, v)
+    flops = 4 * b * s * s * h * hd / 2  # causal
+    results["flash_attention"] = dict(ref_us=t_ref, pallas_interpret_us=t_pal,
+                                      flops=flops)
+    emit("bench_flash_attention", t_pal,
+         f"ref_us={t_ref:.0f};causal_gqa_{s}x{s}x{h}h")
+
+    t = 2048
+    q1 = jax.random.normal(ks[0], (8, h, hd), jnp.float32)
+    k1 = jax.random.normal(ks[1], (8, t, kh, hd), jnp.float32)
+    v1 = jax.random.normal(ks[2], (8, t, kh, hd), jnp.float32)
+    lengths = jnp.full((8,), t, jnp.int32)
+    t_ref = _time(jax.jit(lambda *a: decode_attention_ref(*a)), q1, k1, v1,
+                  lengths)
+    t_pal = _time(lambda *a: decode_attention(*a, interpret=True), q1, k1, v1,
+                  lengths)
+    kv_bytes = 2 * 8 * t * kh * hd * 4
+    results["decode_attention"] = dict(ref_us=t_ref,
+                                       pallas_interpret_us=t_pal,
+                                       kv_bytes=kv_bytes)
+    emit("bench_decode_attention", t_pal,
+         f"ref_us={t_ref:.0f};kv_bytes={kv_bytes}")
+    save_json("bench_kernels", results)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Control-plane latency: router decisions/s and PoA-estimator cost — the
+paper's constraint is sub-millisecond routing (SGLang/vLLM scheduling
+budgets, §1)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.poa import CompletedRequest, PoATracker
+from repro.core.router import KvPushRouter, KvRouterConfig
+from repro.serving.workload import template_tokens
+
+
+def run():
+    r = KvPushRouter(5, KvRouterConfig(temperature=0.7, overlap_weight=1.0))
+    for t in range(5):
+        r.on_schedule(t, template_tokens(t), now=0.0)
+    toks = [template_tokens(i % 5) for i in range(1000)]
+    t0 = time.perf_counter()
+    for tk in toks:
+        r.best_worker(tk, now=1.0)
+    route_us = (time.perf_counter() - t0) / len(toks) * 1e6
+
+    tr = PoATracker(num_workers=5)
+    for i in range(128):
+        tr.record(CompletedRequest(str(i), i % 5, 1.0, [0.0] * 5,
+                                   float(i) * 0.01))
+    t0 = time.perf_counter()
+    for _ in range(50):
+        tr.current_poa()
+    poa_us = (time.perf_counter() - t0) / 50 * 1e6
+
+    print(f"\n# Router micro-bench: route={route_us:.1f}us/decision "
+          f"({1e6/route_us:,.0f}/s), PoA estimate={poa_us:.0f}us/window")
+    emit("bench_router", route_us,
+         f"decisions_per_s={1e6/route_us:,.0f};poa_window_us={poa_us:.0f};"
+         f"sub_ms={'yes' if route_us < 1000 else 'NO'}")
+    save_json("bench_router", dict(route_us=route_us, poa_us=poa_us))
+    return route_us, poa_us
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Shared benchmark helpers: CSV emission, JSON reports, sim sweeps."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Callable, Optional
+
+REPORT_DIR = pathlib.Path("reports/benchmarks")
+
+_rows = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """One CSV row per paper table: name,us_per_call,derived."""
+    line = f"{name},{us_per_call:.1f},{derived}"
+    _rows.append(line)
+    print(line, flush=True)
+
+
+def save_json(name: str, payload):
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    (REPORT_DIR / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def timed(fn: Callable, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def run_sim(name: str, topo: str, concurrency: int, hold_s: float = 120.0,
+            seed: int = 0, **kw):
+    from repro.serving.simulator import ClusterConfig, Simulator
+    from repro.serving.workload import WorkloadConfig
+    sim = Simulator(ClusterConfig.for_model(name, topo),
+                    WorkloadConfig.single_level(concurrency, hold_s=hold_s),
+                    seed=seed, **kw)
+    return sim.run()

@@ -1,0 +1,43 @@
+"""Figure 5: PoA vs concurrency (log-log) for 340B 1P/2D, 70B 1P/2D and
+70B 1P/5D — the three-regime structure."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, run_sim, save_json
+
+LEVELS = [1, 4, 8, 16, 32, 64, 128, 256, 512]
+SERIES = [("nemotron-4-340b", "1P/2D"), ("llama-3.1-70b", "1P/2D"),
+          ("llama-3.1-70b", "1P/5D")]
+
+
+def run(hold_s: float = 90.0):
+    t0 = time.perf_counter()
+    out = {}
+    for model, topo in SERIES:
+        out[f"{model} {topo}"] = [
+            dict(C=c, poa=run_sim(model, topo, c, hold_s).overall().poa)
+            for c in LEVELS]
+    print("\n# Figure 5 — PoA vs concurrency")
+    header = f"{'C':>5}" + "".join(f"{k.split()[0][:12]+' '+k.split()[1]:>22}"
+                                   for k in out)
+    print(header)
+    for i, c in enumerate(LEVELS):
+        row = f"{c:>5}" + "".join(f"{v[i]['poa']:>22.2f}" for v in out.values())
+        print(row)
+    save_json("fig5_poa_curves", out)
+    plat = {k: [r["poa"] for r in v if 32 <= r["C"] <= 96]
+            for k, v in out.items()}
+    mean = lambda xs: sum(xs) / max(len(xs), 1)
+    p340 = mean(plat["nemotron-4-340b 1P/2D"])
+    p70 = mean(plat["llama-3.1-70b 1P/2D"])
+    p70_5 = mean(plat["llama-3.1-70b 1P/5D"])
+    dt = (time.perf_counter() - t0) * 1e6
+    emit("fig5_poa_curves", dt / (3 * len(LEVELS)),
+         f"plateaus_340b/70b2d/70b5d={p340:.1f}/{p70:.1f}/{p70_5:.1f};"
+         f"paper=18.7/7.5/14.9")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+Each module reproduces one paper table/figure on the calibrated cluster
+simulator (Experiments 1-4) or micro-benchmarks a system layer.  Output:
+human-readable tables on stdout + one ``name,us_per_call,derived`` CSV row
+per artifact + JSON payloads under reports/benchmarks/.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="shorter holds / fewer iterations")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+    hold = 60.0 if args.fast else 120.0
+    iters = 2 if args.fast else 3
+
+    from benchmarks import (baselines_static_routing, bench_kernels,
+                            bench_router, exp2_saturation_detection,
+                            fig5_poa_curves, table4_equilibrium,
+                            table5_crossmodel, table6_pareto,
+                            table78_adaptive)
+
+    registry = {
+        "table4": lambda: table4_equilibrium.run(hold),
+        "table5": lambda: table5_crossmodel.run(hold),
+        "exp2": lambda: exp2_saturation_detection.run(hold),
+        "table6": lambda: table6_pareto.run(min(hold, 90.0)),
+        "table78": lambda: table78_adaptive.run(iters),
+        "fig5": lambda: fig5_poa_curves.run(min(hold, 90.0)),
+        "baselines": lambda: baselines_static_routing.run(min(hold, 90.0)),
+        "kernels": bench_kernels.run,
+        "router": bench_router.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in registry.items():
+        if only and name not in only:
+            continue
+        fn()
+    print(f"# total benchmark time: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Table 5: cross-model properties — first post-knee grid point, throughput
+ceiling, ΔTTFT/ΔC finite difference across the knee."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, run_sim, save_json
+
+GRID = [32, 64, 128, 512]
+
+
+def run(hold_s: float = 120.0):
+    t0 = time.perf_counter()
+    out = {}
+    for name in ("nemotron-4-340b", "llama-3.1-70b"):
+        t = {}
+        rps = {}
+        for c in GRID:
+            s = run_sim(name, "1P/2D", c, hold_s).overall()
+            t[c] = s.ttft_p99
+            rps[c] = s.rps
+        d_low = (t[64] - t[32]) / 32
+        d_knee = (t[128] - t[64]) / 64
+        out[name] = dict(ttft=t, ceiling_rps=rps[512],
+                         dttft_dc_low=d_low, dttft_dc_knee=d_knee,
+                         first_postknee_grid_point=128 if d_knee > 4 * d_low
+                         else None)
+    print("\n# Table 5 — cross-model knee/ceiling")
+    print(f"{'property':<32}{'340B':>12}{'70B':>12}")
+    a, b = out["nemotron-4-340b"], out["llama-3.1-70b"]
+    print(f"{'first post-knee grid point':<32}{str(a['first_postknee_grid_point']):>12}"
+          f"{str(b['first_postknee_grid_point']):>12}")
+    print(f"{'throughput ceiling (rps)':<32}{a['ceiling_rps']:>12.1f}{b['ceiling_rps']:>12.1f}")
+    print(f"{'ΔTTFT/ΔC across knee':<32}{a['dttft_dc_knee']:>12.4f}{b['dttft_dc_knee']:>12.4f}")
+    save_json("table5_crossmodel", out)
+    dt = (time.perf_counter() - t0) * 1e6
+    emit("table5_crossmodel", dt / (2 * len(GRID)),
+         f"knee_340b={a['first_postknee_grid_point']};"
+         f"knee_70b={b['first_postknee_grid_point']};"
+         f"ceilings={a['ceiling_rps']:.0f}/{b['ceiling_rps']:.0f}rps")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Table 6 / Figure 6 / Experiments 4a+4b: 4×4 (τ, ω) Pareto sweeps.
+
+(a) 340B 1P/2D at C=64 (below saturation) — PoA invariance;
+(b) 340B 1P/2D at C=128 (saturation) — moderate unstructured spread;
+(c) 70B 1P/2D at C=128 — clearer structure;
+(+) 70B 1P/5D at C=128 — the sweep the controller's TRANSITION row is
+    calibrated from (paper §6.3).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, run_sim, save_json
+from repro.core.router import KvRouterConfig
+
+TAUS = [0.0, 0.3, 0.7, 1.0]
+OMEGAS = [0.0, 0.3, 0.7, 1.0]
+
+
+def sweep(model, topo, concurrency, hold_s):
+    grid = {}
+    for tau in TAUS:
+        for om in OMEGAS:
+            res = run_sim(model, topo, concurrency, hold_s,
+                          router_config=KvRouterConfig(temperature=tau,
+                                                       overlap_weight=om))
+            s = res.overall()
+            grid[(tau, om)] = dict(poa=s.poa, ttft_p99=s.ttft_p99, rps=s.rps)
+    return grid
+
+
+def _print_grid(title, grid, key="poa"):
+    print(f"\n# {title} ({key})")
+    print("tau\\omega " + "".join(f"{o:>8}" for o in OMEGAS))
+    for tau in TAUS:
+        row = "".join(f"{grid[(tau, o)][key]:>8.2f}" for o in OMEGAS)
+        print(f"{tau:>8} {row}")
+    vals = np.asarray([grid[(t, o)][key] for t in TAUS for o in OMEGAS])
+    print(f"mean={vals.mean():.2f} std={vals.std():.2f} "
+          f"spread={vals.max()/max(vals.min(),1e-9):.2f}x")
+    return vals
+
+
+def run(hold_s: float = 90.0):
+    t0 = time.perf_counter()
+    panels = {
+        "a_340b_C64": ("nemotron-4-340b", "1P/2D", 64),
+        "b_340b_C128": ("nemotron-4-340b", "1P/2D", 128),
+        "c_70b2d_C128": ("llama-3.1-70b", "1P/2D", 128),
+        "d_70b5d_C128": ("llama-3.1-70b", "1P/5D", 128),
+    }
+    out = {}
+    stats = {}
+    for key, (model, topo, c) in panels.items():
+        grid = sweep(model, topo, c, hold_s)
+        vals = _print_grid(f"Table 6{key}: {model} {topo} C={c}", grid)
+        out[key] = {f"{t}/{o}": v for (t, o), v in grid.items()}
+        stats[key] = dict(mean=float(vals.mean()), std=float(vals.std()),
+                          spread=float(vals.max() / max(vals.min(), 1e-9)))
+    save_json("table6_pareto", dict(grids=out, stats=stats))
+    dt = (time.perf_counter() - t0) * 1e6
+    emit("table6_pareto", dt / (len(panels) * 16),
+         f"below_sat_spread={stats['a_340b_C64']['spread']:.2f}x;"
+         f"sat_spread_70b={stats['c_70b2d_C128']['spread']:.2f}x")
+    return out, stats
+
+
+if __name__ == "__main__":
+    run()

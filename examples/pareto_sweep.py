@@ -1,0 +1,51 @@
+"""Mini Experiment 4: 4×4 (τ, ω) Pareto sweep at and below saturation.
+
+Reproduces the paper's central 'flatness' finding: router parameters do not
+measurably move the PoA below saturation, and start to matter at the knee.
+
+    PYTHONPATH=src python examples/pareto_sweep.py
+"""
+import numpy as np
+
+from repro.core.router import KvRouterConfig
+from repro.serving.simulator import ClusterConfig, Simulator
+from repro.serving.workload import WorkloadConfig
+
+TAUS = [0.0, 0.3, 0.7, 1.0]
+OMEGAS = [0.0, 0.3, 0.7, 1.0]
+
+
+def sweep(concurrency: int):
+    grid = np.zeros((len(TAUS), len(OMEGAS)))
+    for i, tau in enumerate(TAUS):
+        for j, om in enumerate(OMEGAS):
+            sim = Simulator(
+                ClusterConfig.for_model("llama-3.1-70b", "1P/2D"),
+                WorkloadConfig.single_level(concurrency, hold_s=60.0),
+                router_config=KvRouterConfig(temperature=tau,
+                                             overlap_weight=om))
+            grid[i, j] = sim.run().overall().poa
+    return grid
+
+
+def show(title, grid):
+    print(f"\n{title}")
+    print("tau\\omega " + "".join(f"{o:>8}" for o in OMEGAS))
+    for i, tau in enumerate(TAUS):
+        print(f"{tau:>8} " + "".join(f"{grid[i, j]:>8.2f}"
+                                     for j in range(len(OMEGAS))))
+    print(f"spread: {grid.max() / grid.min():.2f}x  std: {grid.std():.2f}")
+
+
+def main():
+    below = sweep(64)
+    show("PoA at C=64 (below saturation) — expect flat", below)
+    at = sweep(128)
+    show("PoA at C=128 (saturation knee) — structure emerges", at)
+    print(f"\nvariance growth across the knee: "
+          f"{at.std() / max(below.std(), 1e-9):.1f}x "
+          f"(paper: ~37-58x on the real cluster)")
+
+
+if __name__ == "__main__":
+    main()

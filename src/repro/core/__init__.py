@@ -1,0 +1,13 @@
+# The paper's primary contribution: the three coupled games of disaggregated
+# inference, the empirical PoA estimator, and the adaptive routing controller.
+from repro.core.controller import AdaptiveRouter, DualFrontend, REGIME_PARAMS  # noqa: F401
+from repro.core.games import CacheGame, RoutingGame, singular_game  # noqa: F401
+from repro.core.kvbm import KVBlockManager  # noqa: F401
+from repro.core.latency import LatencyParams, latency, routing_cost  # noqa: F401
+from repro.core.metrics import MetricsRegistry  # noqa: F401
+from repro.core.planner import Planner, PlannerConfig, variational_equilibrium  # noqa: F401
+from repro.core.poa import CompletedRequest, PoATracker, hungarian  # noqa: F401
+from repro.core.radix import KvIndexer, block_hashes  # noqa: F401
+from repro.core.router import (KvPushRouter, KvRouterConfig,  # noqa: F401
+                               PowerOfTwoRouter, RandomRouter, RoundRobinRouter)
+from repro.core.saturation import DetectorConfig, Regime, SaturationDetector  # noqa: F401

@@ -1,0 +1,134 @@
+"""Hierarchical KV Block Manager (Game 2's mechanism).
+
+Four tiers — G1 GPU HBM, G2 CPU DRAM, G3 local SSD, G4 networked storage —
+with the paper's frequency-based eviction policy (§2.2): every block's
+frequency starts at 1, doubles on cache hit, and decays by 1 per time-decay
+step; blocks with frequency ≥ 2 are promotion-eligible.  Tier access costs
+follow Eq. 6 (α_G1 < α_G2 < α_G3 < γ recompute).
+
+``capacity_ratio`` ρ = active blocks / G1 capacity drives the Prop. 5 regime
+transition (PoA_KV = 1 below ρ=1; contested above).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+TIERS = ("G1", "G2", "G3", "G4")
+
+# Eq. 6 cost constants (seconds per block access) — α_G1 < α_G2 < α_G3 < γ.
+TIER_COST = {"G1": 0.0001, "G2": 0.001, "G3": 0.010, "G4": 0.050}
+RECOMPUTE_COST = 0.100  # γ — block not cached anywhere
+
+
+@dataclass
+class Block:
+    block_id: int
+    tier: str
+    frequency: float = 1.0
+    size: int = 1
+
+
+class KVBlockManager:
+    """Per-worker hierarchical cache."""
+
+    def __init__(self, capacity: Dict[str, int], worker_id: int = 0):
+        # G4 effectively unbounded
+        self.capacity = {"G1": capacity.get("G1", 1024),
+                         "G2": capacity.get("G2", 4096),
+                         "G3": capacity.get("G3", 16384),
+                         "G4": capacity.get("G4", 1 << 40)}
+        self.worker_id = worker_id
+        self.blocks: Dict[int, Block] = {}
+        self.tier_usage = {t: 0 for t in TIERS}
+        self.evictions = 0
+        self.promotions = 0
+        self.demotions = 0
+
+    # ------------------------------------------------------------- admit ----
+
+    def allocate(self, block_id: int) -> str:
+        """New block: admit to G1, evicting (demoting) as needed."""
+        if block_id in self.blocks:
+            return self.access(block_id)
+        self._make_room("G1")
+        blk = Block(block_id, "G1", frequency=1.0)
+        self.blocks[block_id] = blk
+        self.tier_usage["G1"] += 1
+        return "G1"
+
+    def access(self, block_id: int) -> str:
+        """Cache hit: double frequency; promote if eligible (freq ≥ 2)."""
+        blk = self.blocks.get(block_id)
+        if blk is None:
+            return "MISS"
+        blk.frequency *= 2.0
+        if blk.tier != "G1" and blk.frequency >= 2.0:
+            self._promote(blk)
+        return blk.tier
+
+    def access_cost(self, block_id: int) -> float:
+        blk = self.blocks.get(block_id)
+        if blk is None:
+            return RECOMPUTE_COST
+        return TIER_COST[blk.tier]
+
+    def free(self, block_id: int):
+        blk = self.blocks.pop(block_id, None)
+        if blk is not None:
+            self.tier_usage[blk.tier] -= 1
+
+    # ------------------------------------------------------------ policy ----
+
+    def decay(self):
+        """One time-decay step: every block's frequency decreases by 1."""
+        for blk in self.blocks.values():
+            blk.frequency = max(blk.frequency - 1.0, 0.0)
+
+    def _victim(self, tier: str) -> Optional[Block]:
+        cands = [b for b in self.blocks.values() if b.tier == tier]
+        if not cands:
+            return None
+        return min(cands, key=lambda b: (b.frequency, b.block_id))
+
+    def _make_room(self, tier: str):
+        while self.tier_usage[tier] >= self.capacity[tier]:
+            victim = self._victim(tier)
+            if victim is None:
+                return
+            self._demote(victim)
+
+    def _demote(self, blk: Block):
+        idx = TIERS.index(blk.tier)
+        if idx + 1 >= len(TIERS):
+            self.free(blk.block_id)
+            self.evictions += 1
+            return
+        nxt = TIERS[idx + 1]
+        self._make_room(nxt)
+        self.tier_usage[blk.tier] -= 1
+        blk.tier = nxt
+        self.tier_usage[nxt] += 1
+        self.demotions += 1
+        if nxt != "G1":
+            self.evictions += 1
+
+    def _promote(self, blk: Block):
+        idx = TIERS.index(blk.tier)
+        tgt = TIERS[idx - 1]
+        self._make_room(tgt)
+        self.tier_usage[blk.tier] -= 1
+        blk.tier = tgt
+        self.tier_usage[tgt] += 1
+        self.promotions += 1
+
+    # ------------------------------------------------------------ stats -----
+
+    def capacity_ratio(self) -> float:
+        """ρ of Prop. 5: active blocks vs G1 capacity."""
+        return len(self.blocks) / max(self.capacity["G1"], 1)
+
+    def tier_distribution(self) -> Dict[str, int]:
+        return dict(self.tier_usage)

@@ -1,0 +1,87 @@
+"""The Planner — Game 1 (prefill/decode GNEP resource allocation).
+
+Implements both layers the paper describes:
+
+* ``variational_equilibrium`` — the analytical solution of Prop. 1: on the
+  constraint manifold G_P + G_D = G, find the split equalizing marginal SLO
+  violation improvements (Eq. 5), and the *social optimum* of Remark 1 which
+  additionally credits prefill's positive externality on decode.
+
+* ``Planner`` — the runtime best-response dynamic with inertia: ±1 worker per
+  adjustment interval (30 s), 3-interval grace period for newly assigned
+  decode workers, driven by polled TTFT/ITL violation metrics.  Converges to
+  the variational equilibrium under stationary load (validated in tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+
+def variational_equilibrium(v_ttft: Callable[[float], float],
+                            v_itl: Callable[[float], float],
+                            total: int) -> int:
+    """Integer split G_P* with |marginal| balance of Eq. 5 (exhaustive scan —
+    G is small; convexity makes the crossing unique)."""
+    best, best_gap = 1, float("inf")
+    for gp in range(1, total):
+        gd = total - gp
+        m_p = v_ttft(gp + 1) - v_ttft(gp)      # ≤ 0, marginal improvement
+        m_d = v_itl(gd + 1) - v_itl(gd)
+        gap = abs(m_p - m_d)
+        if gap < best_gap:
+            best, best_gap = gp, gap
+    return best
+
+
+def social_optimum(v_ttft: Callable[[float], float],
+                   v_itl_joint: Callable[[float, float], float],
+                   total: int) -> int:
+    """argmin_{G_P} V_TTFT(G_P) + V_ITL(G−G_P, G_P) (Remark 1)."""
+    costs = [(v_ttft(gp) + v_itl_joint(total - gp, gp), gp)
+             for gp in range(1, total)]
+    return min(costs)[1]
+
+
+@dataclass
+class PlannerConfig:
+    total_workers: int = 3
+    adjust_interval: float = 30.0     # seconds
+    grace_intervals: int = 3          # grace for newly assigned decode workers
+    ttft_slo: float = 1.0             # seconds
+    itl_slo: float = 0.050
+
+
+@dataclass
+class Planner:
+    """±1-worker best-response dynamic over polled violation rates."""
+    config: PlannerConfig = field(default_factory=PlannerConfig)
+    prefill_workers: int = 1
+    decode_workers: int = 2
+    _last_adjust: float = 0.0
+    _grace_until: float = 0.0
+    history: List[Tuple[float, int, int]] = field(default_factory=list)
+
+    def step(self, now: float, ttft_violation: float, itl_violation: float
+             ) -> Optional[str]:
+        """Called per telemetry poll; may move one worker between pools.
+        Returns 'to_prefill' / 'to_decode' / None."""
+        c = self.config
+        if now - self._last_adjust < c.adjust_interval or now < self._grace_until:
+            return None
+        move = None
+        if ttft_violation > itl_violation and self.decode_workers > 1:
+            self.prefill_workers += 1
+            self.decode_workers -= 1
+            move = "to_prefill"
+        elif itl_violation > ttft_violation and self.prefill_workers > 1:
+            self.prefill_workers -= 1
+            self.decode_workers += 1
+            move = "to_decode"
+            self._grace_until = now + c.grace_intervals * c.adjust_interval
+        if move:
+            self._last_adjust = now
+            self.history.append((now, self.prefill_workers, self.decode_workers))
+        return move

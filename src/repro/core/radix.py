@@ -1,0 +1,124 @@
+"""Radix (prefix) tree over token-block hashes — the KvIndexer.
+
+Tracks which KV cache blocks reside on which workers so the Smart Router can
+compute per-worker overlap scores (the positive externality of Game 3).
+Blocks are fixed-size token runs; a sequence maps to the list of hashes of
+its prefixes, so shared prompt prefixes share leading blocks exactly like
+Dynamo's global radix tree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Set, Tuple
+
+BLOCK_SIZE = 16  # tokens per KV block (vLLM/Dynamo default granularity)
+
+
+def block_hashes(tokens: Sequence[int], block_size: int = BLOCK_SIZE) -> List[int]:
+    """Prefix-chained block hashes: hash_i = H(hash_{i-1}, block_i_tokens)."""
+    out: List[int] = []
+    h = 0
+    n_full = len(tokens) // block_size
+    for i in range(n_full):
+        blk = tuple(tokens[i * block_size:(i + 1) * block_size])
+        h = hash((h,) + blk)
+        out.append(h)
+    return out
+
+
+@dataclass
+class _Node:
+    children: Dict[int, "_Node"] = field(default_factory=dict)
+    workers: Dict[int, float] = field(default_factory=dict)  # worker → last touch
+
+
+class KvIndexer:
+    """Prefix tree: path = chained block hashes; each node records which
+    workers hold that block and when they last touched it.
+
+    ``ttl`` models cache churn: a worker's claim on a block expires if not
+    refreshed within ttl seconds (vLLM-style LRU recycling of KV blocks).
+    ``ttl=None`` disables expiry (blocks live forever)."""
+
+    def __init__(self, block_size: int = BLOCK_SIZE,
+                 ttl: Optional[float] = None):
+        self.block_size = block_size
+        self.ttl = ttl
+        self.root = _Node()
+        self._worker_blocks: Dict[int, Set[Tuple[int, ...]]] = {}
+
+    def _fresh(self, node: _Node, worker: int, now: float) -> bool:
+        t = node.workers.get(worker)
+        if t is None:
+            return False
+        return self.ttl is None or (now - t) <= self.ttl
+
+    # ------------------------------------------------------------ update ----
+
+    def insert(self, worker: int, tokens: Sequence[int], now: float = 0.0):
+        hs = block_hashes(tokens, self.block_size)
+        node = self.root
+        path: List[int] = []
+        for h in hs:
+            node = node.children.setdefault(h, _Node())
+            node.workers[worker] = now
+            path.append(h)
+            self._worker_blocks.setdefault(worker, set()).add(tuple(path))
+
+    def remove_worker_blocks(self, worker: int, tokens: Sequence[int]):
+        """Eviction event: drop this worker from every block of the sequence."""
+        hs = block_hashes(tokens, self.block_size)
+        node = self.root
+        path: List[int] = []
+        for h in hs:
+            node = node.children.get(h)
+            if node is None:
+                return
+            node.workers.pop(worker, None)
+            path.append(h)
+            wb = self._worker_blocks.get(worker)
+            if wb is not None:
+                wb.discard(tuple(path))
+
+    def clear_worker(self, worker: int):
+        def walk(node):
+            node.workers.pop(worker, None)
+            for ch in node.children.values():
+                walk(ch)
+        walk(self.root)
+        self._worker_blocks.pop(worker, None)
+
+    # ------------------------------------------------------------- query ----
+
+    def matched_blocks(self, worker: int, tokens: Sequence[int],
+                       now: float = 0.0) -> int:
+        """Longest fresh prefix (in blocks) of `tokens` cached on `worker`."""
+        hs = block_hashes(tokens, self.block_size)
+        node = self.root
+        n = 0
+        for h in hs:
+            node = node.children.get(h)
+            if node is None or not self._fresh(node, worker, now):
+                break
+            n += 1
+        return n
+
+    def overlap_scores(self, tokens: Sequence[int], workers: Sequence[int],
+                       now: float = 0.0):
+        """o_ij ∈ [0,1]: fresh matched-prefix fraction per worker (Eq. 7)."""
+        hs = block_hashes(tokens, self.block_size)
+        total = max(len(hs), 1)
+        out = []
+        for w in workers:
+            node = self.root
+            n = 0
+            for h in hs:
+                node = node.children.get(h)
+                if node is None or not self._fresh(node, w, now):
+                    break
+                n += 1
+            out.append(n / total)
+        return out
+
+    def num_blocks(self, worker: int) -> int:
+        return len(self._worker_blocks.get(worker, ()))

@@ -1,0 +1,159 @@
+"""KV-aware Smart Router — the mechanism of Game 3.
+
+Per-worker cost (Dynamo Eq. 1):      c_j = ω·b_j^prefill + b_j^active
+Worker selection (Eq. 2):            argmin (τ=0)  or  softmax(−c/τ) sample
+
+``b_j^prefill`` — token blocks that would need prefilling on worker j
+(total blocks − cached overlap, from the KvIndexer radix tree);
+``b_j^active`` — active decode blocks on worker j (load proxy).
+
+``best_worker`` accepts a per-request ``router_config_override`` — the hook
+the paper's adaptive controller uses to switch (τ, ω) without restarts.
+The sequential greedy assignment this implements is best-response dynamics
+in the routing congestion game (paper §4.3).
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.radix import BLOCK_SIZE, KvIndexer
+
+
+@dataclass(frozen=True)
+class KvRouterConfig:
+    overlap_weight: float = 1.0        # ω (kv_overlap_score_weight)
+    temperature: float = 0.0           # τ (router_temperature)
+
+
+@dataclass
+class WorkerState:
+    worker_id: int
+    active_blocks: int = 0             # b_j^active
+    healthy: bool = True
+
+
+class KvPushRouter:
+    """The router core; mirrors Dynamo's Python handler semantics."""
+
+    def __init__(self, num_workers: int, config: Optional[KvRouterConfig] = None,
+                 indexer: Optional[KvIndexer] = None, seed: int = 0):
+        self.workers: Dict[int, WorkerState] = {
+            i: WorkerState(i) for i in range(num_workers)}
+        self.config = config or KvRouterConfig()
+        self.indexer = indexer or KvIndexer()
+        self._rng = random.Random(seed)
+
+    # ------------------------------------------------------------- costs ----
+
+    # Cache-affinity scale: how much active load (in request units) a full
+    # prefix hit is worth in the Eq. 1 cost. Dynamo measures both terms in
+    # blocks; we normalize b_active to request units and scale b_prefill so
+    # ω=1 affinity competes with realistic load imbalances (calibration
+    # liberty recorded in DESIGN.md).
+    PREFILL_BLOCK_SCALE = 20.0
+
+    def costs(self, tokens: Sequence[int],
+              config: Optional[KvRouterConfig] = None, now: float = 0.0
+              ) -> Tuple[List[int], List[float], List[float]]:
+        """Returns (worker_ids, costs c_j, overlap fractions o_j)."""
+        cfg = config or self.config
+        ids = [w for w, st in self.workers.items() if st.healthy]
+        overlaps = self.indexer.overlap_scores(tokens, ids, now)
+        costs = []
+        for wid, ov in zip(ids, overlaps):
+            b_prefill = self.PREFILL_BLOCK_SCALE * (1.0 - ov)
+            b_active = self.workers[wid].active_blocks
+            costs.append(cfg.overlap_weight * b_prefill + b_active)
+        return ids, costs, overlaps
+
+    # ------------------------------------------------------------ select ----
+
+    def best_worker(self, tokens: Sequence[int],
+                    router_config_override: Optional[KvRouterConfig] = None,
+                    now: float = 0.0) -> Tuple[int, float, List[float]]:
+        """Returns (worker_id, overlap_score_of_chosen, overlap_per_worker).
+
+        τ=0: deterministic argmin (Eq. 2 limit). τ>0: softmax over costs
+        normalized by their spread (Dynamo's τ∈[0,1] operates on normalized
+        costs; raw block counts would make any τ≤1 effectively greedy)."""
+        cfg = router_config_override or self.config
+        ids, costs, overlaps = self.costs(tokens, cfg, now)
+        if not ids:
+            raise RuntimeError("no healthy workers")
+        if cfg.temperature <= 0.0 or len(ids) == 1:
+            j = min(range(len(ids)), key=lambda i: (costs[i], ids[i]))
+        else:
+            mn = min(costs)
+            spread = max(max(costs) - mn, 1e-9)
+            z = [(c - mn) / spread for c in costs]          # ∈ [0, 1]
+            ws = [math.exp(-zi / cfg.temperature) for zi in z]
+            tot = sum(ws)
+            r = self._rng.random() * tot
+            acc = 0.0
+            j = len(ids) - 1
+            for i, w in enumerate(ws):
+                acc += w
+                if r <= acc:
+                    j = i
+                    break
+        return ids[j], overlaps[j], overlaps
+
+    # --------------------------------------------------------- bookkeeping --
+
+    def on_schedule(self, worker_id: int, tokens: Sequence[int],
+                    decode_blocks: float = 1.0, now: float = 0.0):
+        """Request placed: bump the load proxy and index its KV blocks."""
+        st = self.workers[worker_id]
+        st.active_blocks += decode_blocks
+        self.indexer.insert(worker_id, tokens, now)
+
+    def on_complete(self, worker_id: int, tokens: Sequence[int],
+                    decode_blocks: float = 1.0):
+        st = self.workers[worker_id]
+        st.active_blocks = max(st.active_blocks - decode_blocks, 0.0)
+
+    def set_health(self, worker_id: int, healthy: bool):
+        self.workers[worker_id].healthy = healthy
+
+
+# ------------------------------------------------------ static baselines ----
+
+class RoundRobinRouter:
+    """§9.2 counterfactual baseline."""
+
+    def __init__(self, num_workers: int):
+        self.n = num_workers
+        self._i = 0
+
+    def best_worker(self, tokens, router_config_override=None):
+        w = self._i % self.n
+        self._i += 1
+        return w, 0.0, [0.0] * self.n
+
+
+class RandomRouter:
+    def __init__(self, num_workers: int, seed: int = 0):
+        self.n = num_workers
+        self._rng = random.Random(seed)
+
+    def best_worker(self, tokens, router_config_override=None):
+        return self._rng.randrange(self.n), 0.0, [0.0] * self.n
+
+
+class PowerOfTwoRouter:
+    """Pick two random workers, route to the less loaded (§9.2 baseline)."""
+
+    def __init__(self, router: KvPushRouter, seed: int = 0):
+        self.router = router
+        self._rng = random.Random(seed)
+
+    def best_worker(self, tokens, router_config_override=None):
+        ids = [w for w, st in self.router.workers.items() if st.healthy]
+        a, b = self._rng.sample(ids, 2) if len(ids) >= 2 else (ids[0], ids[0])
+        wa = self.router.workers[a].active_blocks
+        wb = self.router.workers[b].active_blocks
+        w = a if wa <= wb else b
+        return w, 0.0, [0.0] * len(ids)

@@ -1,0 +1,88 @@
+"""Cached decode attention (one new token per sequence) as a Pallas kernel.
+
+Decode is HBM-bandwidth-bound: the kernel's job is to stream the KV cache
+through VMEM exactly once at full bandwidth.  Grid = (batch, kv_head,
+kv_block); all G query heads of a KV group are processed together as a
+(G, hd) tile so the score matmul has an MXU-friendly shape, and the online
+softmax state (m, l, acc) carries in VMEM scratch across KV blocks.
+Per-sequence valid lengths mask trailing cache entries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            blk_k: int, sm_scale: float):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0]
+    k_start = ki * blk_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (blk_k, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        cols = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, lengths, *, blk_k=256, interpret=False):
+    """q: (B,K,G,hd) grouped queries; k,v: (B,T,K,hd); lengths: (B,)."""
+    b, kh, g, hd = q.shape
+    t = k.shape[1]
+    blk_k = min(blk_k, t)
+    assert t % blk_k == 0
+    grid = (b, kh, t // blk_k)
+    sm_scale = 1.0 / np.sqrt(hd)
+    kernel = functools.partial(_kernel, blk_k=blk_k, sm_scale=sm_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, k_: (b_,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, hd), lambda b_, h_, k_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b_, h_, k_: (b_, k_, h_, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b_, h_, k_: (b_, k_, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b_, h_, k_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, k, v)

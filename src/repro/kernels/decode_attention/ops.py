@@ -1,0 +1,33 @@
+"""jit'd wrapper for the decode-attention Pallas kernel (interpret on CPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_pallas)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("blk_k", "interpret"))
+def decode_attention(q, k, v, lengths, *, blk_k=256, interpret=None):
+    """q: (B,H,hd); k,v: (B,T,K,hd); lengths: (B,). Returns (B,H,hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    blk_k = min(blk_k, max(8, t))
+    pad = (-t) % blk_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = q.reshape(b, kh, g, hd)
+    out = decode_attention_pallas(qg, k, v, lengths.astype(jnp.int32),
+                                  blk_k=blk_k, interpret=interpret)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for single-token cached decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q: (B,H,hd); k,v: (B,T,K,hd); lengths: (B,) valid KV entries.
+    Returns (B,H,hd)."""
+    b, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qf = q.astype(jnp.float32).reshape(b, kh, g, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qf, kf) / np.sqrt(hd)
+    mask = jnp.arange(t)[None, None, None, :] < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", probs, vf)
+    return out.reshape(b, h, hd).astype(q.dtype)

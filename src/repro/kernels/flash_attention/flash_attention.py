@@ -1,0 +1,113 @@
+"""Causal GQA flash attention as a Pallas TPU kernel.
+
+TPU adaptation of the flash-attention tiling (DESIGN.md §3): the grid is
+(batch, q_head, q_block, kv_block) with the KV axis innermost; online-softmax
+statistics (m, l) and the fp32 output accumulator live in VMEM scratch and
+carry across the kv_block grid steps (TPU grids execute sequentially per
+core, so scratch carries replace the CUDA warp-level loop).  Q/K/V tiles
+stream HBM→VMEM per grid step; MXU-aligned block sizes (multiples of 128 on
+the matmul dims) are chosen by the wrapper in ``ops.py``.
+
+Causality is handled two ways: whole KV blocks strictly above the diagonal
+are skipped via ``@pl.when`` (no compute issued), and the diagonal block is
+masked elementwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            blk_q: int, blk_k: int, causal: bool, sm_scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * blk_q
+    k_start = ki * blk_k
+    kv_len = kvlen_ref[0]
+    run = jnp.logical_and(
+        k_start < kv_len,
+        (not causal) or (k_start <= q_start + blk_q - 1))
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # (blk_q, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (blk_k, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+        s = jnp.where(cols < kv_len, s, NEG_INF)           # padded keys inert
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, blk_q=128, blk_k=128,
+                           interpret=False, kv_len=None):
+    """q: (B,S,H,hd); k,v: (B,T,K,hd), H = K·G, S % blk_q == 0 == T % blk_k.
+    kv_len masks keys at positions ≥ kv_len (right padding)."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    blk_q = min(blk_q, s)
+    blk_k = min(blk_k, t)
+    assert s % blk_q == 0 and t % blk_k == 0
+    grid = (b, h, s // blk_q, t // blk_k)
+    sm_scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(_kernel, blk_q=blk_q, blk_k=blk_k,
+                               causal=causal, sm_scale=sm_scale)
+    if kv_len is None:
+        kv_len = t
+    kv_len_arr = jnp.asarray([kv_len], jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, q_, k_: (0,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b_, h_, q_, k_: (b_, q_, h_, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b_, h_, q_, k_: (b_, k_, h_ // g, 0)),
+            pl.BlockSpec((1, blk_k, 1, hd), lambda b_, h_, q_, k_: (b_, k_, h_ // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, hd),
+                               lambda b_, h_, q_, k_: (b_, q_, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len_arr, q, k, v)

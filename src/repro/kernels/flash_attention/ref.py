@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,S,H,hd); k,v: (B,T,K,hd) with H = K·G. fp32 softmax.
+    Returns (B,S,H,hd) in q.dtype."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qf = q.astype(jnp.float32).reshape(b, s, kh, g, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qf, kf) / np.sqrt(hd)
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(t)[None, :]
+        mask = (ki <= qi + (t - s))  # allow offset caches (t >= s)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, vf)
+    return out.reshape(b, s, h, hd).astype(q.dtype)

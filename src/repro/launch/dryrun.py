@@ -1,0 +1,77 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init) — this module is the only place the 512-device flag is
+# set, so smoke tests and benchmarks keep seeing 1 device.
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import pathlib      # noqa: E402
+import sys          # noqa: E402
+import traceback    # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.launch.dryrun_lib import run_cell            # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower+compile every "
+                    "(arch x shape x mesh) cell and extract roofline terms.")
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="reports/dryrun.jsonl")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--skip-collectives", action="store_true",
+                    help="full rolled compile + memory only (multi-pod "
+                         "shardability proof; roofline is single-pod)")
+    ap.add_argument("--rules", default=None,
+                    help="JSON dict of sharding-rule overrides (hillclimb)")
+    args = ap.parse_args(argv)
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi", make_production_mesh(multi_pod=True)))
+    rules = json.loads(args.rules) if args.rules else None
+    if rules:
+        rules = {k: (tuple(v) if isinstance(v, list) else v)
+                 for k, v in rules.items()}
+
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    n_fail = 0
+    with out_path.open("a") as f:
+        for mesh_name, mesh in meshes:
+            for arch in archs:
+                for shape in shapes:
+                    if not shape_applicable(get_config(arch), SHAPES[shape]):
+                        print(f"[{mesh_name}] {arch:22s} {shape:12s} SKIP "
+                              f"(full attention, long_500k)", flush=True)
+                        continue
+                    try:
+                        rec = run_cell(arch, shape, mesh,
+                                       rules=rules, remat=not args.no_remat,
+                                       skip_collectives=args.skip_collectives)
+                        rec["mesh_name"] = mesh_name
+                        f.write(json.dumps(rec) + "\n")
+                        f.flush()
+                    except Exception:
+                        n_fail += 1
+                        print(f"[{mesh_name}] {arch} {shape} FAILED",
+                              flush=True)
+                        traceback.print_exc()
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

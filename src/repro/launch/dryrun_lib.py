@@ -1,0 +1,222 @@
+"""Dry-run machinery (mesh-agnostic; the CLI in ``dryrun.py`` sets the
+512-device XLA flag before importing this).
+
+For every (architecture × input-shape × mesh) cell we build the appropriate
+step function (``train_step`` / ``prefill_step`` / ``decode_step``), attach
+the baseline shardings from ``repro.sharding.specs``, ``.lower().compile()``
+it against ShapeDtypeStruct stand-ins (no allocation), and extract:
+
+  * ``compiled.memory_analysis()``  — per-device bytes (proves it fits)
+  * ``compiled.cost_analysis()``    — per-device FLOPs / bytes accessed
+  * collective bytes parsed from the post-SPMD HLO text
+
+which feed the §Roofline terms in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.launch import hlo_analysis
+from repro.models import build_model
+from repro.sharding import ShardingPolicy, use_policy
+from repro.sharding.specs import (cache_shardings, input_shardings,
+                                  param_shardings)
+from repro.training import optimizer as opt_lib
+
+OPT_CFG = opt_lib.OptimizerConfig()
+
+
+def _memory_dict(mem) -> dict:
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "temp_size_in_bytes")
+    return {k: int(getattr(mem, k)) for k in keys}
+
+
+def build_step(arch: str, shape_name: str, policy: ShardingPolicy,
+               *, remat=True, cfg=None):
+    """Returns (fn, args_abstract, in_shardings, donate_argnums, model)."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    long_ctx = shape.name == "long_500k"
+
+    if shape.kind == "train":
+        params = model.init_abstract(jnp.float32)
+        opt = jax.eval_shape(opt_lib.init, params)
+        state = {"params": params, "opt": opt}
+        batch = model.input_specs(shape)
+        p_sh = param_shardings(params, policy)
+        state_sh = {"params": p_sh,
+                    "opt": {"m": p_sh, "v": p_sh,
+                            "step": NamedSharding(policy.mesh, P())}}
+        b_sh = input_shardings(batch, policy)
+
+        def train_step(state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: model.train_loss(p, batch, remat=remat))(state["params"])
+            new_p, new_opt, stats = opt_lib.update(
+                OPT_CFG, state["params"], grads, state["opt"])
+            return {"params": new_p, "opt": new_opt}, (loss, stats)
+
+        return train_step, (state, batch), (state_sh, b_sh), (0,), model
+
+    params = model.init_abstract(jnp.bfloat16)
+    p_sh = param_shardings(params, policy)
+
+    if shape.kind == "prefill":
+        batch = model.input_specs(shape)
+        b_sh = input_shardings(batch, policy)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch)
+
+        return prefill_step, (params, batch), (p_sh, b_sh), (), model
+
+    caches = model.cache_specs(shape)
+    c_sh = cache_shardings(caches, policy, long_context=long_ctx)
+    inp = model.input_specs(shape)
+    t_sh = input_shardings(inp["tokens"], policy)
+    s_sh = NamedSharding(policy.mesh, P())
+
+    def decode_step(params, caches, tokens, cur_index):
+        return model.decode(params, caches, tokens, cur_index)
+
+    args = (params, caches, inp["tokens"], inp["cur_index"])
+    return decode_step, args, (p_sh, c_sh, t_sh, s_sh), (1,), model
+
+
+def _shallow_config(cfg, model, k: int):
+    """Same architecture at depth = k periods (for linear cost extrapolation)."""
+    import dataclasses
+    over = {"num_layers": model.period * k}
+    if cfg.num_encoder_layers:
+        over["num_encoder_layers"] = k
+    return dataclasses.replace(cfg, **over)
+
+
+def _compile_once(arch, shape_name, policy, mesh, *, remat, cfg=None):
+    fn, args, in_sh, donate, model = build_step(
+        arch, shape_name, policy, remat=remat, cfg=cfg)
+    t0 = time.time()
+    lowered = jax.jit(fn, in_shardings=in_sh,
+                      donate_argnums=donate).lower(*args)
+    lower_s = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    return compiled, model, lower_s, compile_s
+
+
+def _extract_costs(compiled, n_dev):
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    nbytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    coll = hlo_analysis.collective_bytes(compiled.as_text(), n_dev)
+    return flops, nbytes, coll
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, rules: Optional[dict] = None,
+             remat=True, verbose=True, skip_collectives=False) -> dict:
+    """One dry-run cell.
+
+    1. Full model, loops rolled: ``.lower().compile()`` proof +
+       ``memory_analysis()`` (the deliverable-(e) artifact).
+    2. FLOPs / bytes from the jaxpr cost counter (launch/jaxpr_cost.py):
+       exact trip-count multiplication of every scan, fast on rolled
+       models (XLA's cost_analysis counts a `while` body once).
+    3. Collectives from shallow depth-1/depth-2 compiles where only the
+       *layer stack* is unrolled (collectives — FSDP gathers, gradient
+       reductions — live at layer boundaries, not inside the inner chunk
+       scans), extrapolated linearly in depth:
+           total = coll(k=1) + (n_periods − 1) · [coll(k=2) − coll(k=1)]
+    """
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if not shape_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k requires sub-quadratic attention"}
+    n_dev = mesh.devices.size
+    policy = ShardingPolicy(mesh, rules)
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "x".join(str(s) for s in mesh.devices.shape),
+              "devices": int(n_dev), "skipped": False}
+    from repro.launch import jaxpr_cost
+    from repro.models import runtime_flags as flags
+
+    with mesh, use_policy(policy):
+        fn, args, in_sh, donate, model = build_step(
+            arch, shape_name, policy, remat=remat)
+        t0 = time.time()
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          donate_argnums=donate).lower(*args)
+        record["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t0, 2)
+        record["memory"] = _memory_dict(compiled.memory_analysis())
+        full_coll = hlo_analysis.collective_bytes(compiled.as_text(), n_dev)
+        del compiled, lowered
+
+        # exact flops/bytes from the jaxpr (global shapes → per-device)
+        cost = jaxpr_cost.cost_of(fn, *args)
+        flops = cost.flops / n_dev
+        nbytes = cost.bytes / n_dev
+
+        coll_total = 0.0
+        coll_kinds = {}
+        coll_counts = {}
+        if not skip_collectives:
+            with flags.unroll_for_analysis():
+                c1, _, _, _ = _compile_once(
+                    arch, shape_name, policy, mesh, remat=remat,
+                    cfg=_shallow_config(cfg, model, 1))
+                _, _, coll1 = _extract_costs(c1, n_dev)
+                del c1
+                c2, _, _, _ = _compile_once(
+                    arch, shape_name, policy, mesh, remat=remat,
+                    cfg=_shallow_config(cfg, model, 2))
+                _, _, coll2 = _extract_costs(c2, n_dev)
+                del c2
+            p = model.n_periods
+            coll_total = coll1.total_bytes + (p - 1) * (coll2.total_bytes
+                                                        - coll1.total_bytes)
+            coll_kinds = {
+                k: coll1.bytes_by_kind.get(k, 0.0)
+                + (p - 1) * (coll2.bytes_by_kind.get(k, 0.0)
+                             - coll1.bytes_by_kind.get(k, 0.0))
+                for k in set(coll1.bytes_by_kind) | set(coll2.bytes_by_kind)}
+            coll_counts = dict(coll2.counts)
+
+    record["cost"] = {"flops": flops, "bytes_accessed": nbytes,
+                      "source": "jaxpr"}
+    record["collectives"] = {
+        "counts_per_depth2": coll_counts,
+        "bytes_by_kind": coll_kinds,
+        "total_bytes": coll_total,
+        "full_rolled_counts": dict(full_coll.counts),
+    }
+
+    class _C:  # lightweight stand-in for roofline_terms
+        total_bytes = coll_total
+    record["roofline"] = hlo_analysis.roofline_terms(
+        {"flops": flops, "bytes accessed": nbytes}, _C)
+
+    mf_dev = model.model_flops(shape) / n_dev
+    record["model_flops_per_device"] = mf_dev
+    record["useful_flops_ratio"] = (mf_dev / flops) if flops else 0.0
+    if verbose:
+        r = record["roofline"]
+        print(f"[{record['mesh']}] {arch:22s} {shape_name:12s} "
+              f"compile={record['compile_s']:6.1f}s "
+              f"comp={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+              f"coll={r['collective_s']:.3e}s -> {r['bottleneck']}"
+              f" frac={r['roofline_fraction']:.2f} "
+              f"useful={record['useful_flops_ratio']:.2f}", flush=True)
+    return record

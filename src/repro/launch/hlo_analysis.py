@@ -1,0 +1,145 @@
+"""Post-SPMD HLO analysis: collective-byte accounting + roofline terms.
+
+``compiled.cost_analysis()`` reports per-device FLOPs / bytes (verified by
+probe — post-SPMD partitioning), but no collective traffic.  We parse the
+optimized HLO text and sum the estimated per-device bytes moved by every
+collective op, using standard ring-algorithm volume factors:
+
+    all-reduce        2·(g-1)/g · bytes
+    all-gather          (g-1)/g · bytes   (bytes = full gathered result)
+    reduce-scatter      (g-1)/g · bytes   (bytes = unscattered input)
+    all-to-all          (g-1)/g · bytes
+    collective-permute        1 · bytes
+
+Hardware constants are TPU v5e (the production target):
+    197 TFLOP/s bf16 / chip, 819 GB/s HBM / chip, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # bytes/s / chip
+ICI_BW = 50e9               # bytes/s effective per chip (one ~50 GB/s link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    """Total bytes of all array shapes in an HLO result signature."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    bytes_by_kind: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    total_bytes: float = 0.0
+
+    def as_dict(self):
+        return {"counts": dict(self.counts),
+                "bytes_by_kind": {k: float(v) for k, v in self.bytes_by_kind.items()},
+                "total_bytes": float(self.total_bytes)}
+
+
+def _find_collective(rhs: str):
+    """Return (kind, index-of-op) if rhs applies a collective op."""
+    for c in _COLLECTIVES:
+        for suffix in ("", "-start"):
+            token = c + suffix + "("
+            idx = rhs.find(token)
+            if idx < 0:
+                continue
+            if idx > 0 and (rhs[idx - 1].isalnum() or rhs[idx - 1] in "-_."):
+                continue  # part of a longer identifier
+            return c, idx
+    return None, -1
+
+
+def collective_bytes(hlo_text: str, num_devices: int) -> CollectiveStats:
+    """Per-device collective traffic estimate from optimized HLO text.
+
+    Shapes in post-SPMD HLO are per-device; we convert to per-device bytes
+    *moved* with ring-algorithm factors (see module docstring).
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped or "-done(" in stripped:
+            continue  # bytes are counted at the op/-start line
+        lhs, rhs = stripped.split("=", 1)
+        op, idx = _find_collective(rhs)
+        if op is None:
+            continue
+        # result signature sits between '=' and the op name
+        nbytes = _shape_bytes(rhs[:idx])
+        if nbytes == 0:
+            nbytes = _shape_bytes(lhs)
+        g = _group_size(stripped, num_devices)
+        if g <= 1 or nbytes == 0:
+            continue
+        if op == "all-reduce":
+            moved = 2.0 * (g - 1) / g * nbytes
+        elif op == "collective-permute":
+            moved = float(nbytes)
+        elif op == "reduce-scatter":
+            moved = (g - 1) * float(nbytes)     # result is the scattered shard
+        else:  # all-gather / all-to-all: result is the full gathered shape
+            moved = (g - 1) / g * nbytes
+        stats.counts[op] += 1
+        stats.bytes_by_kind[op] += moved
+        stats.total_bytes += moved
+    return stats
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats) -> dict:
+    """Three roofline terms (seconds, per device == per step)."""
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    bytes_accessed = float(cost.get("bytes accessed", 0.0) or 0.0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = coll.total_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll,
+             "hlo_flops_per_device": flops,
+             "hlo_bytes_per_device": bytes_accessed,
+             "collective_bytes_per_device": coll.total_bytes}
+    dom = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    terms["bottleneck"] = dom.replace("_s", "")
+    bound = max(t_compute, t_memory, t_coll)
+    terms["roofline_fraction"] = t_compute / bound if bound > 0 else 0.0
+    return terms

@@ -1,0 +1,261 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention, MLPs.
+
+Pure-JAX parameter-dict style.  Compute runs in bf16 with fp32 softmax and
+norms; parameters are stored in the dtype handed to ``init`` (fp32 for
+training, bf16 for serving).
+
+Attention supports: causal self-attention (train / prefill), single-token
+cached decode, bidirectional encoding, and cross-attention — all with
+grouped-query heads.  When ``use_flash`` is set and the call is a pure causal
+self-attention, the Pallas flash kernel is used instead of the XLA einsum
+path (see ``repro.kernels.flash_attention``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import runtime_flags as flags
+from repro.sharding import shard
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _init(rng, shape, scale, dtype):
+    return (jax.random.normal(rng, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------- rope ----
+
+def rope_table(positions, head_dim, theta):
+    """positions: int32 (...,S) → (cos, sin) each (...,S,head_dim//2) fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B,S,H,hd); cos/sin: (B,S,half) or (S,half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1f, x2f = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1f * cos - x2f * sin, x1f * sin + x2f * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+
+def attention_init(rng, cfg, dtype, cross=False):
+    d, h, k, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    r = jax.random.split(rng, 5)
+    s_in = d ** -0.5
+    s_out = (h * hd) ** -0.5
+    p = {
+        "norm": rmsnorm_init(d, dtype),
+        "wq": _init(r[0], (d, h, hd), s_in, dtype),
+        "wk": _init(r[1], (d, k, hd), s_in, dtype),
+        "wv": _init(r[2], (d, k, hd), s_in, dtype),
+        "wo": _init(r[3], (h, hd, d), s_out, dtype),
+    }
+    return p
+
+
+def _sdpa(q, k, v, mask, q_per_kv):
+    """q: (B,S,H,hd) — k,v: (B,T,K,hd) — mask broadcastable to (B,K,G,S,T)."""
+    b, s, h, hd = q.shape
+    kheads = k.shape[2]
+    q = q.reshape(b, s, kheads, q_per_kv, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+# Queries are processed in blocks of this length so the (S×T) score matrix is
+# never fully materialized — the XLA-path analogue of flash-attention tiling
+# (the Pallas kernel is the production TPU path).
+Q_CHUNK = 1024
+
+
+def _sdpa_chunked(q, k, v, qpos, q_per_kv, *, kind, kv_lengths=None,
+                  q_chunk=None):
+    if q_chunk is None:
+        q_chunk = flags.Q_CHUNK_OVERRIDE or Q_CHUNK
+    """Memory-bounded attention. kind: 'causal' (kv_pos<=q_pos), 'full',
+    or 'length' (kv_pos < kv_lengths). qpos: (B,S) int32 query positions."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+
+    def block(q_blk, qp_blk):
+        mask = None
+        if kind == "causal":
+            kv_pos = jnp.arange(t, dtype=jnp.int32)
+            mask = kv_pos[None, None, None, None, :] <= qp_blk[:, None, None, :, None]
+        elif kind == "length" and kv_lengths is not None:
+            kv_pos = jnp.arange(t, dtype=jnp.int32)
+            mask = kv_pos[None, None, None, None, :] < kv_lengths[:, None, None, None, None]
+        return _sdpa(q_blk, k, v, mask, q_per_kv)
+
+    if s <= q_chunk:
+        return block(q, qpos)
+    pad = (-s) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pad)))
+    nq = q.shape[1] // q_chunk
+    qr = jnp.moveaxis(q.reshape(b, nq, q_chunk, h, hd), 1, 0)
+    pr = jnp.moveaxis(qpos.reshape(b, nq, q_chunk), 1, 0)
+    _, outs = jax.lax.scan(lambda c, args: (c, block(*args)), None, (qr, pr),
+                           unroll=flags.inner_scan_unroll(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * q_chunk, h, hd)
+    return out[:, :s]
+
+
+def attention(params, x, cfg, *, positions=None, kv_cache=None, write_index=None,
+              kv_source=None, causal=True, kv_lengths=None, use_rope=True,
+              use_flash=False):
+    """General GQA attention.
+
+    x: (B,S,D) hidden states.
+    positions: (S,) or (B,S) int32 query positions (for RoPE + causal mask).
+    kv_cache: dict(k=(B,T,K,hd), v=...) — decode / incremental mode. K/V for
+        the current tokens are written at ``write_index``; attention spans the
+        whole cache masked by position.
+    kv_source: (B,T,D) — cross-attention keys/values come from here.
+    kv_lengths: (B,) valid KV length per batch row (cross / cache masking).
+    Returns (out, new_kv_cache_or_None).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    xn = rmsnorm(params["norm"], x, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xn, params["wq"].astype(COMPUTE_DTYPE))
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    src = xn if kv_source is None else kv_source.astype(xn.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(COMPUTE_DTYPE))
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(COMPUTE_DTYPE))
+
+    if use_rope and kv_source is None:
+        if positions is None:
+            positions = jnp.arange(s, dtype=jnp.int32)
+        cos, sin = rope_table(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if kv_cache is not None:
+        # write current K/V at write_index, attend over the full cache.
+        # write_index may be a scalar (aligned batch) or an int32 (B,) vector
+        # (ragged continuous batching — masked scatter, S must be 1).
+        # Constrain the incoming K/V to the cache's layout first — otherwise
+        # XLA's SPMD partitioner resolves the sharding mismatch inside the
+        # update by replicating the FULL cache (§Perf iteration 2: this was
+        # ~50% of decode collective traffic).
+        k = shard(k, "decode_batch", None, "kv_heads", "kv_head_dim")
+        v = shard(v, "decode_batch", None, "kv_heads", "kv_head_dim")
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        widx = jnp.asarray(write_index, jnp.int32) if write_index is not None \
+            else jnp.int32(0)
+        if widx.ndim == 0:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, widx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, widx, 0, 0))
+        else:
+            sel = (jnp.arange(ck.shape[1], dtype=jnp.int32)[None, :, None, None]
+                   == widx[:, None, None, None])
+            ck = jnp.where(sel, k.astype(ck.dtype), ck)
+            cv = jnp.where(sel, v.astype(cv.dtype), cv)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(COMPUTE_DTYPE), cv.astype(COMPUTE_DTYPE)
+
+    if positions is None:
+        qp = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    elif positions.ndim == 1:
+        qp = jnp.broadcast_to(positions[None].astype(jnp.int32), (b, s))
+    else:
+        qp = positions.astype(jnp.int32)
+
+    if kv_cache is not None:
+        kind = "causal"
+    elif kv_source is not None:
+        kind = "length" if kv_lengths is not None else "full"
+    elif causal:
+        if use_flash and s == k.shape[1] and s % 128 == 0:
+            from repro.kernels.flash_attention import ops as flash_ops
+            out = flash_ops.flash_attention(q, k, v, causal=True)
+            out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(COMPUTE_DTYPE))
+            return shard(out, "batch", "seq", "act_embed"), new_cache
+        kind = "causal"
+    else:
+        kind = "full"
+
+    out = _sdpa_chunked(q, k, v, qp, cfg.q_heads_per_kv, kind=kind,
+                        kv_lengths=kv_lengths)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(COMPUTE_DTYPE))
+    return shard(out, "batch", "seq", "act_embed"), new_cache
+
+
+def attention_cache_init(cfg, batch, max_len, dtype=COMPUTE_DTYPE):
+    k, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, k, hd), dtype),
+        "v": jnp.zeros((batch, max_len, k, hd), dtype),
+    }
+
+
+# ------------------------------------------------------------------ mlp ----
+
+def mlp_init(rng, cfg, dtype, d_ff=None):
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    r = jax.random.split(rng, 3)
+    p = {"norm": rmsnorm_init(d, dtype)}
+    if cfg.activation == "swiglu":
+        p["wg"] = _init(r[0], (d, f), d ** -0.5, dtype)
+    p["wu"] = _init(r[1], (d, f), d ** -0.5, dtype)
+    p["wd"] = _init(r[2], (f, d), f ** -0.5, dtype)
+    return p
+
+
+def mlp(params, x, cfg):
+    xn = rmsnorm(params["norm"], x, cfg.norm_eps)
+    wu = params["wu"].astype(COMPUTE_DTYPE)
+    wd = params["wd"].astype(COMPUTE_DTYPE)
+    h = jnp.einsum("bsd,df->bsf", xn, wu)
+    h = shard(h, "batch", "seq", "act_mlp")
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", xn, params["wg"].astype(COMPUTE_DTYPE))
+        h = jax.nn.silu(g) * h
+    elif cfg.activation == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("bsf,fd->bsd", h, wd)
+    return shard(out, "batch", "seq", "act_embed")

@@ -1,0 +1,461 @@
+"""Unified model: one scan-over-layers decoder covering all assigned families.
+
+Layers are grouped into *periods* (the smallest repeating block pattern —
+1 for dense/MoE, 8 for Jamba's 1:7 attn:mamba interleave, 4 for xLSTM's
+mLSTM/sLSTM mix) and the stack is a ``lax.scan`` over ``num_layers //
+period`` periods with stacked parameters, keeping HLO size independent of
+depth.
+
+Three entry points per model:
+  * ``train_loss(params, batch)``      — next-token loss (teacher forcing)
+  * ``prefill(params, batch, max_len)``— fills KV/state caches, last logits
+  * ``decode(params, caches, tokens, cur_index)`` — one token w/ cache
+
+``input_specs``/``cache_specs`` provide ShapeDtypeStruct stand-ins for the
+multi-pod dry-run (no allocation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import runtime_flags as flags
+from repro.models import ssm as ssm_lib
+from repro.sharding import shard
+
+# Deterministic synthetic-shape conventions for enc-dec / VLM cells
+ENC_CTX_DECODE = 4_096   # encoder context length used by decode shapes
+DEC_PREFIX = 64          # decoder prefix length for enc-dec prefill cells
+
+
+@dataclass(frozen=True)
+class BlockDesc:
+    mixer: str                 # attn | mamba | mlstm | slstm
+    mlp: Optional[str]         # dense | moe | None
+    cross: bool = False
+
+
+ENC_DESC = BlockDesc("attn", "dense")
+
+
+def layer_layout(cfg: ModelConfig):
+    """Return (period, [BlockDesc per position within the period])."""
+    if cfg.family == "ssm":
+        x = cfg.xlstm
+        period = x.slstm_every
+        descs = [BlockDesc("slstm" if i % x.slstm_every == x.slstm_offset
+                           else "mlstm", None) for i in range(period)]
+        return period, descs
+    period = cfg.attn_layer_period
+    if cfg.moe is not None:
+        period = int(np.lcm(period, cfg.moe.every_k_layers))
+    descs = []
+    for i in range(period):
+        mixer = "attn"
+        if cfg.family == "hybrid" and i % cfg.attn_layer_period != cfg.attn_layer_offset:
+            mixer = "mamba"
+        if cfg.moe is not None and i % cfg.moe.every_k_layers == cfg.moe.moe_layer_offset:
+            mlp = "moe"
+        elif cfg.d_ff > 0:
+            mlp = "dense"
+        else:
+            mlp = None
+        descs.append(BlockDesc(mixer, mlp, cross=cfg.cross_attention))
+    assert cfg.num_layers % period == 0, (cfg.name, cfg.num_layers, period)
+    return period, descs
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.period, self.descs = layer_layout(cfg)
+        self.n_periods = cfg.num_layers // self.period
+        self.use_flash = False  # engines may switch on Pallas attention
+
+    # ------------------------------------------------------------- init ----
+
+    def _block_init(self, rng, desc: BlockDesc, dtype):
+        cfg = self.cfg
+        r = jax.random.split(rng, 4)
+        p = {}
+        if desc.mixer == "attn":
+            p["attn"] = L.attention_init(r[0], cfg, dtype)
+        elif desc.mixer == "mamba":
+            p["mamba"] = ssm_lib.mamba_init(r[0], cfg, dtype)
+        elif desc.mixer == "mlstm":
+            p["mlstm"] = ssm_lib.mlstm_init(r[0], cfg, dtype)
+        elif desc.mixer == "slstm":
+            p["slstm"] = ssm_lib.slstm_init(r[0], cfg, dtype)
+        if desc.cross:
+            p["xattn"] = L.attention_init(r[1], cfg, dtype)
+        if desc.mlp == "dense":
+            p["mlp"] = L.mlp_init(r[2], cfg, dtype)
+        elif desc.mlp == "moe":
+            p["moe"] = moe_lib.moe_init(r[2], cfg, dtype)
+        return p
+
+    def _period_init(self, rng, dtype, descs=None):
+        descs = descs if descs is not None else self.descs
+        rs = jax.random.split(rng, len(descs))
+        return {f"p{i}": self._block_init(rs[i], d, dtype)
+                for i, d in enumerate(descs)}
+
+    def init(self, rng, dtype=jnp.float32):
+        cfg = self.cfg
+        r = jax.random.split(rng, 6)
+        params = {
+            "embed": (jax.random.normal(r[0], (cfg.vocab_size, cfg.d_model),
+                                        jnp.float32) * 0.02).astype(dtype),
+            "unembed": (jax.random.normal(r[1], (cfg.d_model, cfg.vocab_size),
+                                          jnp.float32)
+                        * cfg.d_model ** -0.5).astype(dtype),
+            "final_norm": L.rmsnorm_init(cfg.d_model, dtype),
+            "stack": jax.vmap(lambda k: self._period_init(k, dtype))(
+                jax.random.split(r[2], self.n_periods)),
+        }
+        if cfg.frontend:
+            params["frontend_proj"] = (
+                jax.random.normal(r[3], (cfg.frontend_dim, cfg.d_model),
+                                  jnp.float32) * cfg.frontend_dim ** -0.5
+            ).astype(dtype)
+        if cfg.num_encoder_layers:
+            params["enc_stack"] = jax.vmap(
+                lambda k: self._period_init(k, dtype, [ENC_DESC]))(
+                jax.random.split(r[4], cfg.num_encoder_layers))
+            params["enc_final_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+        return params
+
+    def init_abstract(self, dtype=jnp.float32):
+        return jax.eval_shape(lambda k: self.init(k, dtype),
+                              jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------ blocks ----
+
+    def _block_apply(self, desc, bp, x, bc, *, positions, write_index,
+                     enc_out, causal=True):
+        """Apply one block. bc (the block cache) is None in train mode.
+        Returns (x, new_block_cache, moe_aux or None)."""
+        cfg = self.cfg
+        is_step = x.shape[1] == 1 and bc is not None
+        nc = {}
+        if desc.mixer == "attn":
+            h, kv = L.attention(bp["attn"], x, cfg, positions=positions,
+                                kv_cache=bc.get("kv") if bc else None,
+                                write_index=write_index, causal=causal,
+                                use_flash=self.use_flash)
+            if bc is not None:
+                nc["kv"] = kv
+            x = x + h
+        elif desc.mixer == "mamba":
+            h, st = ssm_lib.mamba_block(
+                bp["mamba"], x, cfg, cache=bc.get("state") if is_step else None)
+            if bc is not None:
+                nc["state"] = st
+            x = x + h
+        elif desc.mixer == "mlstm":
+            h, st = ssm_lib.mlstm_block(
+                bp["mlstm"], x, cfg, cache=bc.get("state") if is_step else None)
+            if bc is not None:
+                nc["state"] = st
+            x = x + h
+        elif desc.mixer == "slstm":
+            h, st = ssm_lib.slstm_block(
+                bp["slstm"], x, cfg, cache=bc.get("state") if is_step else None)
+            if bc is not None:
+                nc["state"] = st
+            x = x + h
+        if desc.cross:
+            if bc is not None:
+                xk, xv = bc["xk"], bc["xv"]
+                h = self._cross_cached(bp["xattn"], x, xk, xv)
+                nc["xk"], nc["xv"] = xk, xv
+            else:
+                h, _ = L.attention(bp["xattn"], x, cfg, kv_source=enc_out,
+                                   causal=False, use_rope=False)
+            x = x + h
+        aux = None
+        if desc.mlp == "dense":
+            x = x + L.mlp(bp["mlp"], x, cfg)
+        elif desc.mlp == "moe":
+            h, aux = moe_lib.moe(bp["moe"], x, cfg)
+            x = x + h
+        return x, nc, aux
+
+    def _cross_cached(self, params, x, xk, xv):
+        """Cross-attention against precomputed (cached) encoder K/V."""
+        cfg = self.cfg
+        xn = L.rmsnorm(params["norm"], x, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", xn, params["wq"].astype(L.COMPUTE_DTYPE))
+        out = L._sdpa(q, xk.astype(L.COMPUTE_DTYPE), xv.astype(L.COMPUTE_DTYPE),
+                      None, cfg.q_heads_per_kv)
+        return jnp.einsum("bshk,hkd->bsd", out,
+                          params["wo"].astype(L.COMPUTE_DTYPE))
+
+    # ------------------------------------------------------------ stacks ----
+
+    def _run_stack(self, stack, x, *, caches=None, positions=None,
+                   write_index=None, enc_out=None, causal=True, remat=False):
+        """lax.scan over periods. Returns (x, new_caches_or_None, aux_sum)."""
+        collect = caches is not None
+
+        def body(carry, per):
+            xx = carry
+            pp, pc = per if collect else (per, None)
+            new_c = {}
+            aux_sum = jnp.zeros((), jnp.float32)
+            for i, desc in enumerate(self.descs):
+                bc = pc[f"p{i}"] if pc is not None else None
+                xx, ncb, aux = self._block_apply(
+                    desc, pp[f"p{i}"], xx, bc, positions=positions,
+                    write_index=write_index, enc_out=enc_out, causal=causal)
+                new_c[f"p{i}"] = ncb
+                if aux is not None:
+                    aux_sum = aux_sum + aux["moe_aux_loss"]
+            return xx, ((new_c, aux_sum) if collect else aux_sum)
+
+        if remat:
+            body = jax.checkpoint(body)
+        unroll = flags.scan_unroll(self.n_periods)
+        if collect:
+            x, (new_caches, aux) = jax.lax.scan(body, x, (stack, caches),
+                                                unroll=unroll)
+        else:
+            x, aux = jax.lax.scan(body, x, stack, unroll=unroll)
+            new_caches = None
+        return x, new_caches, jnp.sum(aux)
+
+    def _run_encoder(self, params, frames):
+        cfg = self.cfg
+        x = jnp.einsum("bsf,fd->bsd", frames.astype(L.COMPUTE_DTYPE),
+                       params["frontend_proj"].astype(L.COMPUTE_DTYPE))
+        x = shard(x, "batch", "seq", "act_embed")
+
+        def body(xx, pp):
+            xx, _, _ = self._block_apply(ENC_DESC, pp["p0"], xx, None,
+                                         positions=None, write_index=None,
+                                         enc_out=None, causal=False)
+            return xx, None
+
+        x, _ = jax.lax.scan(body, x, params["enc_stack"],
+                            unroll=flags.scan_unroll(cfg.num_encoder_layers))
+        return L.rmsnorm(params["enc_final_norm"], x, cfg.norm_eps)
+
+    # ------------------------------------------------------------- embed ----
+
+    def _embed_inputs(self, params, batch):
+        """Returns (x, enc_out, label_offset)."""
+        cfg = self.cfg
+        enc_out = None
+        if cfg.family == "encdec":
+            enc_out = self._run_encoder(params, batch["frames"])
+        x = params["embed"].astype(L.COMPUTE_DTYPE)[batch["tokens"]]
+        offset = 0
+        if cfg.family == "vlm" and "patches" in batch:
+            pe = jnp.einsum("bpf,fd->bpd",
+                            batch["patches"].astype(L.COMPUTE_DTYPE),
+                            params["frontend_proj"].astype(L.COMPUTE_DTYPE))
+            x = jnp.concatenate([pe, x], axis=1)
+            offset = pe.shape[1]
+        return shard(x, "batch", "seq", "act_embed"), enc_out, offset
+
+    # ------------------------------------------------------------- train ----
+
+    def train_loss(self, params, batch, *, remat=True):
+        """Next-token cross-entropy (+ MoE load-balance aux loss)."""
+        cfg = self.cfg
+        x, enc_out, offset = self._embed_inputs(params, batch)
+        x, _, aux = self._run_stack(params["stack"], x, enc_out=enc_out,
+                                    remat=remat)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        if offset:
+            x = x[:, offset:, :]
+        tokens = batch["tokens"]
+        loss = _chunked_ce(x[:, :-1], tokens[:, 1:], params["unembed"])
+        if cfg.moe is not None:
+            loss = loss + 0.01 * aux / max(self.n_periods, 1)
+        return loss
+
+    # ----------------------------------------------------------- serving ----
+
+    def cache_init(self, batch, max_len, abstract=False):
+        """Stacked caches pytree for a decode session (zeros/-inf or SDS)."""
+        def build():
+            per = {}
+            for i, desc in enumerate(self.descs):
+                c = {}
+                if desc.mixer == "attn":
+                    c["kv"] = L.attention_cache_init(self.cfg, batch, max_len)
+                elif desc.mixer == "mamba":
+                    c["state"] = ssm_lib.mamba_cache_init(self.cfg, batch)
+                elif desc.mixer == "mlstm":
+                    c["state"] = ssm_lib.mlstm_cache_init(self.cfg, batch)
+                elif desc.mixer == "slstm":
+                    c["state"] = ssm_lib.slstm_cache_init(self.cfg, batch)
+                if desc.cross:
+                    k, hd = self.cfg.num_kv_heads, self.cfg.resolved_head_dim
+                    c["xk"] = jnp.zeros((batch, ENC_CTX_DECODE, k, hd),
+                                        L.COMPUTE_DTYPE)
+                    c["xv"] = jnp.zeros((batch, ENC_CTX_DECODE, k, hd),
+                                        L.COMPUTE_DTYPE)
+                per[f"p{i}"] = c
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_periods,) + a.shape)
+                          + jnp.zeros((), a.dtype), per)
+        if abstract:
+            return jax.eval_shape(build)
+        return build()
+
+    def prefill(self, params, batch, max_len=None):
+        """Process the prompt; returns (last_logits (B,V), caches)."""
+        cfg = self.cfg
+        x, enc_out, _ = self._embed_inputs(params, batch)
+        b, s = x.shape[0], x.shape[1]
+        max_len = max_len or s
+        caches = self.cache_init(b, max_len)
+        if cfg.family == "encdec" and enc_out is not None:
+            caches = self._fill_cross_cache(params, caches, enc_out)
+        positions = jnp.arange(s, dtype=jnp.int32)
+        x, new_caches, _ = self._run_stack(
+            params["stack"], x, caches=caches, positions=positions,
+            write_index=0, enc_out=enc_out)
+        x = L.rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["unembed"].astype(L.COMPUTE_DTYPE))
+        return logits[:, 0].astype(jnp.float32), new_caches
+
+    def _fill_cross_cache(self, params, caches, enc_out):
+        def fill(pp, pc):
+            out = dict(pc)
+            for i, desc in enumerate(self.descs):
+                if desc.cross:
+                    xp = pp[f"p{i}"]["xattn"]
+                    src = enc_out.astype(L.COMPUTE_DTYPE)
+                    xk = jnp.einsum("bsd,dhk->bshk", src,
+                                    xp["wk"].astype(L.COMPUTE_DTYPE))
+                    xv = jnp.einsum("bsd,dhk->bshk", src,
+                                    xp["wv"].astype(L.COMPUTE_DTYPE))
+                    c = dict(out[f"p{i}"])
+                    t = c["xk"].shape[1]
+                    c["xk"] = _fit_len(xk, t)
+                    c["xv"] = _fit_len(xv, t)
+                    out[f"p{i}"] = c
+            return out
+        return jax.vmap(fill, in_axes=(0, 0))(params["stack"], caches)
+
+    def decode(self, params, caches, tokens, cur_index):
+        """One decode step. tokens: (B,1) int32; cur_index: scalar int32, or
+        an int32 (B,) vector for ragged continuous batching."""
+        cfg = self.cfg
+        x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+        x = shard(x, "decode_batch", None, "act_embed")
+        cur = jnp.asarray(cur_index, jnp.int32)
+        if cur.ndim == 0:
+            positions = jnp.full((tokens.shape[0], 1), cur, jnp.int32)
+        else:
+            positions = cur[:, None]
+        x, new_caches, _ = self._run_stack(
+            params["stack"], x, caches=caches, positions=positions,
+            write_index=cur)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["unembed"].astype(L.COMPUTE_DTYPE))
+        return logits[:, 0].astype(jnp.float32), new_caches
+
+    # ----------------------------------------------------------- dry-run ----
+
+    def input_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStruct stand-ins for the step inputs (no allocation)."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32, bf16 = jnp.int32, jnp.bfloat16
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "encdec":
+                dec = s if shape.kind == "train" else DEC_PREFIX
+                return {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), bf16),
+                        "tokens": jax.ShapeDtypeStruct((b, dec), i32)}
+            if cfg.family == "vlm":
+                return {"patches": jax.ShapeDtypeStruct(
+                            (b, cfg.num_patches, cfg.frontend_dim), bf16),
+                        "tokens": jax.ShapeDtypeStruct((b, s - cfg.num_patches), i32)}
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+                "cur_index": jax.ShapeDtypeStruct((), i32)}
+
+    def cache_specs(self, shape: ShapeConfig):
+        assert shape.kind == "decode"
+        return self.cache_init(shape.global_batch, shape.seq_len, abstract=True)
+
+    # ------------------------------------------------------------- flops ----
+
+    def model_flops(self, shape: ShapeConfig) -> float:
+        """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N = active params."""
+        n = self.cfg.active_param_count()
+        if shape.kind == "train":
+            return 6.0 * n * shape.global_batch * shape.seq_len
+        if shape.kind == "prefill":
+            return 2.0 * n * shape.global_batch * shape.seq_len
+        return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+LOSS_CHUNK = 512
+
+
+def _chunked_ce(x, tgt, unembed, chunk=LOSS_CHUNK):
+    """Cross-entropy without materializing the full (B,S,V) logits: the
+    sequence is processed in blocks of ``chunk`` via lax.map (checkpointed so
+    the backward pass also stays block-sized)."""
+    b, s, d = x.shape
+
+    @jax.checkpoint
+    def block(args):
+        xb, tb, wb = args
+        logits = jnp.einsum("bsd,dv->bsv", xb,
+                            unembed.astype(L.COMPUTE_DTYPE))
+        logits = shard(logits, "batch", "seq", "vocab").astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, tb[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - ll) * wb), jnp.sum(wb)
+
+    if s <= chunk:
+        tot, cnt = block((x, tgt, jnp.ones((b, s), jnp.float32)))
+        return tot / cnt
+    pad = (-s) % chunk
+    w = jnp.ones((b, s), jnp.float32)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        tgt = jnp.pad(tgt, ((0, 0), (0, pad)))
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    nc = x.shape[1] // chunk
+    xs = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    ts = jnp.moveaxis(tgt.reshape(b, nc, chunk), 1, 0)
+    ws = jnp.moveaxis(w.reshape(b, nc, chunk), 1, 0)
+    _, (tots, cnts) = jax.lax.scan(
+        lambda c, args: (c, block(args)), None, (xs, ts, ws),
+        unroll=flags.scan_unroll(nc))
+    return jnp.sum(tots) / jnp.sum(cnts)
+
+
+def _fit_len(x, t):
+    if x.shape[1] == t:
+        return x
+    if x.shape[1] > t:
+        return x[:, :t]
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, t - x.shape[1])
+    return jnp.pad(x, pad)
+
+
+_MODEL_CACHE = {}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg not in _MODEL_CACHE:
+        _MODEL_CACHE[cfg] = Model(cfg)
+    return _MODEL_CACHE[cfg]

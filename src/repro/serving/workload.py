@@ -1,0 +1,75 @@
+"""Workload generation (paper Section 7.4).
+
+Short-chat profile: 5 prompt templates × 128 input tokens, 256 max output
+tokens, deterministic generation.  Closed-loop clients hold a target
+concurrency via a semaphore; each phase has a linear ramp then a hold.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+NUM_TEMPLATES = 5
+INPUT_TOKENS = 128
+OUTPUT_TOKENS = 256
+
+
+def template_tokens(template_id: int, n_tokens: int = INPUT_TOKENS) -> List[int]:
+    """Deterministic token ids per template (shared prefixes per template)."""
+    base = (template_id % NUM_TEMPLATES) * 100_000
+    return [base + i for i in range(n_tokens)]
+
+
+@dataclass(frozen=True)
+class Phase:
+    target_concurrency: int
+    ramp_s: float
+    hold_s: float
+
+
+@dataclass(frozen=True)
+class WorkloadConfig:
+    phases: Tuple[Phase, ...]
+    input_tokens: int = INPUT_TOKENS
+    output_tokens: int = OUTPUT_TOKENS
+    num_templates: int = NUM_TEMPLATES
+
+    @classmethod
+    def single_level(cls, concurrency: int, hold_s: float = 120.0,
+                     ramp_s: float = 30.0) -> "WorkloadConfig":
+        return cls(phases=(Phase(concurrency, ramp_s, hold_s),))
+
+    @classmethod
+    def load_spike(cls, low: int = 32, high: int = 128,
+                   durations=(120.0, 180.0, 120.0)) -> "WorkloadConfig":
+        """Experiment 3: C = low → high → low."""
+        return cls(phases=(Phase(low, 10.0, durations[0]),
+                           Phase(high, 10.0, durations[1]),
+                           Phase(low, 0.0, durations[2])))
+
+    def total_duration(self) -> float:
+        return sum(p.ramp_s + p.hold_s for p in self.phases)
+
+    def concurrency_at(self, t: float) -> int:
+        """Target concurrency at absolute time t (linear ramps)."""
+        t0 = 0.0
+        prev = 0
+        for p in self.phases:
+            if t < t0 + p.ramp_s:
+                frac = (t - t0) / max(p.ramp_s, 1e-9)
+                return max(1, int(round(prev + frac * (p.target_concurrency - prev))))
+            t0 += p.ramp_s
+            if t < t0 + p.hold_s:
+                return p.target_concurrency
+            t0 += p.hold_s
+            prev = p.target_concurrency
+        return 0
+
+    def phase_of(self, t: float):
+        """Index of the phase active at time t (ramp attributed to its phase)."""
+        t0 = 0.0
+        for i, p in enumerate(self.phases):
+            t0 += p.ramp_s + p.hold_s
+            if t < t0:
+                return i
+        return len(self.phases) - 1

@@ -1,0 +1,3 @@
+from repro.sharding.policy import (  # noqa: F401
+    ShardingPolicy, LOGICAL_RULES, current_policy, use_policy, shard,
+)

@@ -1,0 +1,134 @@
+"""Logical-axis sharding policy with divisibility fallbacks.
+
+Tensors are annotated with *logical* axis names; a ``ShardingPolicy`` maps
+them to mesh axes, dropping any assignment whose dimension size is not
+divisible by the mesh-axis product (the MaxText-style fallback).  This keeps
+one set of model-code annotations valid across all 10 assigned architectures
+(whose head counts are not uniformly divisible by the model-parallel degree).
+
+The policy is installed via a context manager and consulted from the model
+code through :func:`shard`, which is a no-op when no policy is active (so the
+same model code runs unsharded on CPU tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisAssign = Union[None, str, Tuple[str, ...]]
+
+# Default logical → mesh-axis rules.  Order within the tuple matters only for
+# readability; divisibility is checked against the product.
+LOGICAL_RULES: Mapping[str, AxisAssign] = {
+    # data-like axes
+    "batch": ("pod", "data"),
+    "decode_batch": ("pod", "data"),
+    "seq": None,
+    "long_seq": ("pod", "data"),     # long_500k: batch=1, shard KV sequence
+    # activation feature axes
+    "act_embed": None,               # d_model of activations — replicated
+    "act_mlp": ("model",),           # TP'd FFN intermediate activations
+    "heads": ("model",),
+    "head_dim": None,
+    # parameter axes
+    "embed": ("data",),              # FSDP axis for the non-TP param dim
+    "vocab": ("model",),
+    "kv_heads": ("model",),
+    "kv_head_dim": ("model",),       # fallback when kv_heads % model != 0
+    "kv_feature": ("model",),        # fallback axis: flattened K*hd or hd
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": None,
+    "ssm_inner": ("model",),
+    "ssm_state": None,
+    "stack": None,                   # scanned layer dim — never sharded
+    "expert_batch": ("data",),       # capacity dim of the MoE dispatch buffer
+}
+
+
+class ShardingPolicy:
+    def __init__(self, mesh: Mesh, rules: Optional[Mapping[str, AxisAssign]] = None):
+        self.mesh = mesh
+        self.rules = dict(LOGICAL_RULES)
+        if rules:
+            self.rules.update(rules)
+
+    def _axis_size(self, assign: AxisAssign) -> int:
+        if assign is None:
+            return 1
+        if isinstance(assign, str):
+            assign = (assign,)
+        size = 1
+        for a in assign:
+            size *= dict(zip(self.mesh.axis_names, self.mesh.devices.shape)).get(a, 1)
+        return size
+
+    def spec(self, logical_axes: Sequence[Optional[str]],
+             dim_sizes: Optional[Sequence[int]] = None) -> P:
+        """PartitionSpec for the given logical axes, with divisibility fallback."""
+        parts = []
+        used: set = set()
+        for i, name in enumerate(logical_axes):
+            assign = self.rules.get(name) if name else None
+            if assign is None:
+                parts.append(None)
+                continue
+            if isinstance(assign, str):
+                assign = (assign,)
+            # only mesh axes that exist, are unused, and divide the dim
+            assign = tuple(a for a in assign if a in self.mesh.axis_names and a not in used)
+            if not assign:
+                parts.append(None)
+                continue
+            if dim_sizes is not None:
+                size = dim_sizes[i]
+                keep = []
+                prod = 1
+                for a in assign:
+                    asz = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[a]
+                    if size % (prod * asz) == 0:
+                        keep.append(a)
+                        prod *= asz
+                assign = tuple(keep)
+            if not assign:
+                parts.append(None)
+                continue
+            used.update(assign)
+            parts.append(assign if len(assign) > 1 else assign[0])
+        return P(*parts)
+
+    def sharding(self, logical_axes: Sequence[Optional[str]],
+                 dim_sizes: Optional[Sequence[int]] = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, dim_sizes))
+
+
+_POLICY: contextvars.ContextVar[Optional[ShardingPolicy]] = contextvars.ContextVar(
+    "sharding_policy", default=None)
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return _POLICY.get()
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    token = _POLICY.set(policy)
+    try:
+        yield policy
+    finally:
+        _POLICY.reset(token)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint if a policy is active; identity otherwise."""
+    policy = _POLICY.get()
+    if policy is None:
+        return x
+    if x.ndim != len(logical_axes):
+        return x
+    spec = policy.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(policy.mesh, spec))

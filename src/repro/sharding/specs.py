@@ -1,0 +1,169 @@
+"""Concrete sharding-spec assignment for params, step inputs and KV caches.
+
+Baseline policy (recorded in EXPERIMENTS.md and iterated in §Perf):
+
+* **Parameters / optimizer state** — fully-sharded (FSDP+TP): for every ≥2-D
+  leaf, the largest non-stack dim is sharded over ``model`` and the next
+  largest over ``data`` (each subject to divisibility). Embedding tables get
+  (vocab→model, d_model→data).
+* **Step inputs** — batch over ``(pod, data)``.
+* **KV caches** — batch over ``(pod, data)``; KV heads over ``model`` when
+  divisible, else head_dim over ``model``; for ``long_500k`` (batch=1) the
+  cache sequence dim takes the batch axes instead (sequence-sharded KV).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.sharding.policy import ShardingPolicy
+
+
+def _mesh_size(policy: ShardingPolicy, axis: str) -> int:
+    sizes = dict(zip(policy.mesh.axis_names, policy.mesh.devices.shape))
+    return sizes.get(axis, 1)
+
+
+def _data_axes(policy: ShardingPolicy):
+    return tuple(a for a in ("pod", "data") if a in policy.mesh.axis_names)
+
+
+def _fits(policy, size, axes):
+    prod = 1
+    for a in axes:
+        prod *= _mesh_size(policy, a)
+    return size % prod == 0 and prod > 1
+
+
+def param_spec(path: str, shape, policy: ShardingPolicy) -> P:
+    """Heuristic FSDP+TP spec for a parameter leaf.
+
+    Rule knob ``_no_fsdp`` (truthy) switches to TP-only parameter sharding
+    (no data-axis shard → no per-step parameter all-gathers); used by the
+    serving perf variants in §Perf.
+    """
+    ndim = len(shape)
+    parts: list = [None] * ndim
+    if ndim <= 1:
+        return P(*parts)  # scalars / vectors (norm scales, biases): replicated
+    no_fsdp = bool(policy.rules.get("_no_fsdp"))
+    is_stacked = ("stack" in path)
+    start = 1 if (is_stacked and ndim >= 2) else 0
+    da = _data_axes(policy)
+    dspec = da if len(da) > 1 else (da[0] if da else None)
+
+    # Megatron-style attention TP (§Perf iteration 4): shard Q/K/V
+    # projections on the heads dim (output heads-sharded, zero collectives)
+    # and the output projection on its contracting heads dim (psum of the
+    # tiny (B,S,D) activation instead of gathering the weight); K/V fall
+    # back to head_dim when kv_heads don't divide — which also matches the
+    # KV-cache layout, eliminating cache re-gathers in decode.
+    name = path.rsplit("[", 1)[-1]
+    if ndim - start == 3 and any(t in path for t in
+                                 ("'wq'", "'wk'", "'wv'", "'wo'")):
+        if "'wo'" in path:
+            h_dim, hd_dim, d_dim = start, start + 1, start + 2
+        else:
+            d_dim, h_dim, hd_dim = start, start + 1, start + 2
+        if _fits(policy, shape[h_dim], ("model",)):
+            parts[h_dim] = "model"
+        elif _fits(policy, shape[hd_dim], ("model",)):
+            parts[hd_dim] = "model"
+        if not no_fsdp and _fits(policy, shape[d_dim], da):
+            parts[d_dim] = dspec
+        return P(*parts)
+    if path.endswith("embed") and ndim == 2:
+        # (vocab, d) or (d, vocab)
+        v_dim = 0 if shape[0] > shape[1] else 1
+        d_dim = 1 - v_dim
+        if _fits(policy, shape[v_dim], ("model",)):
+            parts[v_dim] = "model"
+        da = _data_axes(policy)
+        if not no_fsdp and _fits(policy, shape[d_dim], da):
+            parts[d_dim] = da if len(da) > 1 else da[0]
+        return P(*parts)
+    dims = sorted(range(start, ndim), key=lambda i: -shape[i])
+    used = []
+    for i in dims:
+        if _fits(policy, shape[i], ("model",)) and "model" not in used:
+            parts[i] = "model"
+            used.append("model")
+            break
+    if not no_fsdp:
+        da = _data_axes(policy)
+        for i in dims:
+            if parts[i] is None and _fits(policy, shape[i], da):
+                parts[i] = da if len(da) > 1 else da[0]
+                break
+    return P(*parts)
+
+
+def param_shardings(params, policy: ShardingPolicy):
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+    def leaf(path, x):
+        p = jax.tree_util.keystr(path)
+        return NamedSharding(policy.mesh, param_spec(p, x.shape, policy))
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def input_shardings(specs, policy: ShardingPolicy, *, long_context=False):
+    """Batch-shard every array input; scalars replicated."""
+    da = _data_axes(policy)
+    dspec = da if len(da) > 1 else (da[0] if da else None)
+
+    def leaf(x):
+        if x.ndim == 0:
+            return NamedSharding(policy.mesh, P())
+        parts = [None] * x.ndim
+        if _fits(policy, x.shape[0], da):
+            parts[0] = dspec
+        return NamedSharding(policy.mesh, P(*parts))
+
+    return jax.tree.map(leaf, specs)
+
+
+def cache_shardings(cache, policy: ShardingPolicy, *, long_context=False):
+    """Stacked KV/state cache specs (leading dim = scan periods)."""
+    da = _data_axes(policy)
+    dspec = da if len(da) > 1 else (da[0] if da else None)
+
+    def leaf(path, x):
+        key = jax.tree_util.keystr(path)
+        parts: list = [None] * x.ndim
+        shape = x.shape
+        if x.ndim == 0:
+            return NamedSharding(policy.mesh, P())
+        # dim 0 is the scan/period dim — never sharded
+        if any(k in key for k in ("'k'", "'v'", "'xk'", "'xv'")) and x.ndim == 5:
+            # (periods, B, T, K, hd)
+            if long_context and _fits(policy, shape[2], da):
+                parts[2] = dspec            # sequence-sharded KV
+            elif _fits(policy, shape[1], da):
+                parts[1] = dspec
+            if policy.rules.get("_kv_seq_model") and \
+                    _fits(policy, shape[2], ("model",)):
+                # flash-decoding layout: KV sequence over the model axis —
+                # attention reduces over the sharded T with tiny softmax-stat
+                # all-reduces instead of re-gathering the cache (§Perf it. 3)
+                parts[2] = "model" if parts[2] is None else parts[2]
+            elif _fits(policy, shape[3], ("model",)):
+                parts[3] = "model"
+            elif _fits(policy, shape[4], ("model",)):
+                parts[4] = "model"
+            return NamedSharding(policy.mesh, P(*parts))
+        # generic state: (periods, B, ...) — batch over data, largest feature
+        # dim over model
+        if x.ndim >= 2 and _fits(policy, shape[1], da):
+            parts[1] = dspec
+        feat = sorted(range(2, x.ndim), key=lambda i: -shape[i])
+        for i in feat:
+            if _fits(policy, shape[i], ("model",)):
+                parts[i] = "model"
+                break
+        return NamedSharding(policy.mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)

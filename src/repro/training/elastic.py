@@ -1,0 +1,118 @@
+"""Elastic scaling, fault tolerance, and straggler mitigation.
+
+At 1000+ nodes the run must survive node loss and slow hosts:
+
+* ``HeartbeatMonitor`` — lease-backed liveness (the etcd pattern from the
+  paper's event plane): hosts that miss ``timeout`` are declared failed.
+* ``ElasticMesh`` — given the surviving device count, picks the largest
+  valid (data, model) mesh ≤ available devices (model-parallel degree is
+  fixed by the sharding policy; the data axis shrinks/grows), and reshards
+  a checkpointed state onto it.  Combined with the counter-mode data
+  pipeline, a shrink/grow is: checkpoint → remesh → restore → continue.
+* ``StragglerMitigator`` — deadline-based: per-step host durations are
+  tracked; hosts slower than ``factor``× the rolling median get flagged and
+  (in the driver) their microbatches reassigned / host cordoned.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding import ShardingPolicy
+from repro.sharding.specs import param_shardings
+
+
+@dataclass
+class HeartbeatMonitor:
+    timeout: float = 30.0
+    _last: Dict[int, float] = field(default_factory=dict)
+
+    def beat(self, host_id: int, now: Optional[float] = None):
+        self._last[host_id] = time.monotonic() if now is None else now
+
+    def failed_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self._last.items() if now - t > self.timeout]
+
+    def alive_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self._last.items() if now - t <= self.timeout]
+
+
+class ElasticMesh:
+    """Rebuild the mesh when the healthy device set changes."""
+
+    def __init__(self, model_parallel: int, axis_names=("data", "model")):
+        self.model_parallel = model_parallel
+        self.axis_names = axis_names
+
+    def best_shape(self, num_devices: int) -> Tuple[int, int]:
+        mp = self.model_parallel
+        if num_devices < mp:
+            raise RuntimeError(
+                f"need >= {mp} devices for model parallelism, have {num_devices}")
+        data = num_devices // mp
+        return (data, mp)
+
+    def make_mesh(self, devices=None) -> Mesh:
+        devices = devices if devices is not None else jax.devices()
+        shape = self.best_shape(len(devices))
+        n = shape[0] * shape[1]
+        arr = np.asarray(devices[:n]).reshape(shape)
+        return Mesh(arr, self.axis_names)
+
+    def reshard_state(self, state, old_mesh: Mesh, new_mesh: Mesh):
+        """Move a train state onto a new mesh (device_put with the policy's
+        specs recomputed for the new topology)."""
+        policy = ShardingPolicy(new_mesh)
+        p_sh = param_shardings(state["params"], policy)
+        sh = {"params": p_sh,
+              "opt": {"m": p_sh, "v": p_sh,
+                      "step": NamedSharding(new_mesh,
+                                            jax.sharding.PartitionSpec())}}
+        return jax.tree.map(jax.device_put, state, sh)
+
+
+@dataclass
+class StragglerMitigator:
+    factor: float = 1.5
+    window: int = 16
+    _durations: Dict[int, List[float]] = field(default_factory=dict)
+
+    def record(self, host_id: int, step_duration: float):
+        buf = self._durations.setdefault(host_id, [])
+        buf.append(step_duration)
+        if len(buf) > self.window:
+            buf.pop(0)
+
+    def medians(self) -> Dict[int, float]:
+        return {h: float(np.median(v)) for h, v in self._durations.items() if v}
+
+    def stragglers(self) -> List[int]:
+        meds = self.medians()
+        if len(meds) < 2:
+            return []
+        overall = float(np.median(list(meds.values())))
+        return [h for h, m in meds.items() if m > self.factor * overall]
+
+    def reassignment(self, num_microbatches: int) -> Dict[int, int]:
+        """Deadline-aware microbatch shares ∝ 1/median-duration."""
+        meds = self.medians()
+        if not meds:
+            return {}
+        inv = {h: 1.0 / m for h, m in meds.items()}
+        tot = sum(inv.values())
+        raw = {h: num_microbatches * w / tot for h, w in inv.items()}
+        out = {h: int(np.floor(r)) for h, r in raw.items()}
+        rem = num_microbatches - sum(out.values())
+        for h, _ in sorted(raw.items(), key=lambda kv: -(kv[1] % 1)):
+            if rem <= 0:
+                break
+            out[h] += 1
+            rem -= 1
+        return out

@@ -1,0 +1,100 @@
+"""Training driver: jitted (optionally sharded) train step with gradient
+accumulation, checkpoint/restart, and fault-tolerance hooks.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import Model, build_model
+from repro.training import checkpoint as ckpt_lib
+from repro.training import optimizer as opt_lib
+from repro.training.data import DataConfig, make_batch
+
+
+@dataclass
+class TrainConfig:
+    opt: opt_lib.OptimizerConfig = field(default_factory=opt_lib.OptimizerConfig)
+    grad_accum: int = 1
+    remat: bool = True
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+
+
+def make_train_step(model: Model, cfg: TrainConfig):
+    def train_step(state, batch):
+        def loss_fn(p):
+            return model.train_loss(p, batch, remat=cfg.remat)
+
+        if cfg.grad_accum <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        else:
+            # microbatch accumulation along the batch axis
+            def mb(i, carry):
+                acc_loss, acc_grads = carry
+                mb_batch = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // cfg.grad_accum),
+                        x.shape[0] // cfg.grad_accum, 0), batch)
+                l, g = jax.value_and_grad(
+                    lambda p: model.train_loss(p, mb_batch, remat=cfg.remat)
+                )(state["params"])
+                return (acc_loss + l,
+                        jax.tree.map(jnp.add, acc_grads, g))
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state["params"])
+            loss, grads = jax.lax.fori_loop(
+                0, cfg.grad_accum, mb, (jnp.zeros((), jnp.float32), zeros))
+            loss = loss / cfg.grad_accum
+            grads = jax.tree.map(lambda g: g / cfg.grad_accum, grads)
+        new_p, new_opt, stats = opt_lib.update(
+            cfg.opt, state["params"], grads, state["opt"])
+        stats = dict(stats, loss=loss)
+        return {"params": new_p, "opt": new_opt}, stats
+
+    return jax.jit(train_step, donate_argnums=0)
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, shape: ShapeConfig,
+                 cfg: Optional[TrainConfig] = None, seed: int = 0):
+        self.model_cfg = model_cfg
+        self.shape = shape
+        self.cfg = cfg or TrainConfig()
+        self.model = build_model(model_cfg)
+        params = self.model.init(jax.random.PRNGKey(seed), jnp.float32)
+        self.state = {"params": params, "opt": opt_lib.init(params)}
+        self.step_fn = make_train_step(self.model, self.cfg)
+        self.step = 0
+        self.history: list = []
+        self.data_cfg = DataConfig(vocab_size=model_cfg.vocab_size,
+                                   seq_len=shape.seq_len,
+                                   global_batch=shape.global_batch, seed=seed)
+        if self.cfg.ckpt_dir:
+            try:
+                self.state, self.step = ckpt_lib.restore(
+                    self.cfg.ckpt_dir, self.state)
+                print(f"restored checkpoint at step {self.step}")
+            except FileNotFoundError:
+                pass
+
+    def run(self, num_steps: int, log: Optional[Callable[[dict], None]] = None):
+        for _ in range(num_steps):
+            batch = make_batch(self.data_cfg, self.step)
+            t0 = time.time()
+            self.state, stats = self.step_fn(self.state, batch)
+            stats = {k: float(v) for k, v in stats.items()}
+            stats.update(step=self.step, step_time=time.time() - t0)
+            self.history.append(stats)
+            if log and self.step % self.cfg.log_every == 0:
+                log(stats)
+            self.step += 1
+            if (self.cfg.ckpt_dir and self.step % self.cfg.ckpt_every == 0):
+                ckpt_lib.save(self.cfg.ckpt_dir, self.step, self.state)
+        return self.history

@@ -1,0 +1,9 @@
+import os
+
+# Keep tests on a single CPU device (the 512-device flag is set ONLY inside
+# repro.launch.dryrun; sub-process tests set their own).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

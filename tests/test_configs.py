@@ -1,0 +1,84 @@
+"""Assigned-architecture configs: exact published numbers + plausible sizes."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, get_reduced, shape_applicable
+
+EXPECTED = {
+    "nemotron-4-340b": dict(num_layers=96, d_model=18432, num_heads=96,
+                            num_kv_heads=8, d_ff=73728, vocab_size=256000,
+                            activation="squared_relu"),
+    "phi4-mini-3.8b": dict(num_layers=32, d_model=3072, num_heads=24,
+                           num_kv_heads=8, d_ff=8192, vocab_size=200064,
+                           activation="swiglu"),
+    "minitron-4b": dict(num_layers=32, d_model=3072, num_heads=24,
+                        num_kv_heads=8, d_ff=9216, vocab_size=256000),
+    "stablelm-3b": dict(num_layers=32, d_model=2560, num_heads=32,
+                        num_kv_heads=32, d_ff=6912, vocab_size=50304),
+    "jamba-v0.1-52b": dict(num_layers=32, d_model=4096, num_heads=32,
+                           num_kv_heads=8, d_ff=14336, vocab_size=65536),
+    "arctic-480b": dict(num_layers=35, d_model=7168, num_heads=56,
+                        num_kv_heads=8, d_ff=4864, vocab_size=32000),
+    "qwen3-moe-30b-a3b": dict(num_layers=48, d_model=2048, num_heads=32,
+                              num_kv_heads=4, d_ff=768, vocab_size=151936),
+    "seamless-m4t-medium": dict(num_layers=12, d_model=1024, num_heads=16,
+                                num_kv_heads=16, d_ff=4096, vocab_size=256206),
+    "phi-3-vision-4.2b": dict(num_layers=32, d_model=3072, num_heads=32,
+                              num_kv_heads=32, d_ff=8192, vocab_size=32064),
+    "xlstm-125m": dict(num_layers=12, d_model=768, num_heads=4,
+                       num_kv_heads=4, d_ff=0, vocab_size=50304),
+}
+
+PARAM_RANGES = {  # (min, max) in billions
+    "nemotron-4-340b": (310, 370), "phi4-mini-3.8b": (3.4, 5.0),
+    "minitron-4b": (3.6, 4.8), "stablelm-3b": (2.2, 3.4),
+    "jamba-v0.1-52b": (46, 57), "arctic-480b": (430, 520),
+    "qwen3-moe-30b-a3b": (27, 33), "seamless-m4t-medium": (0.6, 1.4),
+    "phi-3-vision-4.2b": (3.3, 4.7), "xlstm-125m": (0.09, 0.2),
+}
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED))
+def test_exact_numbers(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+
+
+def test_ten_archs_assigned():
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", list(PARAM_RANGES))
+def test_param_counts(arch):
+    lo, hi = PARAM_RANGES[arch]
+    n = get_config(arch).param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    qwen = get_config("qwen3-moe-30b-a3b")
+    assert 2.0e9 <= qwen.active_param_count() <= 4.0e9  # "A3B"
+    jamba = get_config("jamba-v0.1-52b")
+    assert 9e9 <= jamba.active_param_count() <= 15e9    # ~12B active
+    arctic = get_config("arctic-480b")
+    assert 12e9 <= arctic.active_param_count() <= 22e9  # ~17B active
+
+
+def test_long_context_skips():
+    runnable = {a for a in ASSIGNED_ARCHS
+                if shape_applicable(get_config(a), SHAPES["long_500k"])}
+    assert runnable == {"jamba-v0.1-52b", "xlstm-125m"}
+
+
+def test_cell_count():
+    from repro.configs import all_cells
+    cells = list(all_cells())
+    # 10 archs x 4 shapes - 8 long_500k skips
+    assert len(cells) == 32
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_configs_are_small(arch):
+    cfg = get_reduced(arch)
+    assert cfg.d_model <= 256 and cfg.vocab_size <= 1024
+    assert cfg.family == get_config(arch).family

@@ -1,0 +1,68 @@
+"""Adaptive controller: Table 2 regime→(τ,ω) mapping, Algorithm 1 metrics,
+dual-frontend zero-downtime switch."""
+import pytest
+
+from repro.core.controller import (AdaptiveRouter, DualFrontend, REGIME_PARAMS)
+from repro.core.router import KvPushRouter, KvRouterConfig
+from repro.core.saturation import DetectorConfig, Regime, SaturationDetector
+
+
+def test_table2_parameters():
+    assert REGIME_PARAMS[Regime.BELOW] == KvRouterConfig(
+        temperature=0.0, overlap_weight=1.0)
+    assert REGIME_PARAMS[Regime.TRANSITION] == KvRouterConfig(
+        temperature=0.7, overlap_weight=1.0)
+    # conjectural row (flagged in the paper, implemented for completeness)
+    assert REGIME_PARAMS[Regime.SATURATED] == KvRouterConfig(
+        temperature=0.8, overlap_weight=0.1)
+
+
+def _controller(adaptive=True):
+    det = SaturationDetector(DetectorConfig(theta1=0.3, theta2=2.0,
+                                            alpha=1.0, hysteresis_k=1))
+    return AdaptiveRouter(router=KvPushRouter(2), detector=det,
+                          adaptive=adaptive)
+
+
+def test_regime_gated_params_applied():
+    c = _controller()
+    c.route(list(range(64)), now=0.0)
+    assert c.metrics.gauge("game_router_temperature").value == 0.0
+    c.poll(5.0, 5.0)  # jump straight to SATURATED
+    c.route(list(range(64)), now=6.0)
+    assert c.metrics.gauge("game_router_temperature").value == 0.8
+    assert c.metrics.gauge("game_overlap_weight").value == 0.1
+    assert c.metrics.gauge("game_saturation_state").value == 2
+
+
+def test_static_mode_ignores_regime():
+    c = _controller(adaptive=False)
+    c.poll(5.0, 5.0)
+    c.route(list(range(64)), now=6.0)
+    assert c.metrics.gauge("game_router_temperature").value == 0.0
+
+
+def test_routing_cost_histogram_populated():
+    c = _controller()
+    for i in range(5):
+        c.route(list(range(64)), now=float(i))
+    assert c.metrics.histogram("game_routing_cost").count(5.0) == 5
+
+
+def test_dual_frontend_switch_and_recovery():
+    df = DualFrontend()
+    assert df.active_port == 8000
+    df.on_regime(Regime.TRANSITION, now=10.0)
+    assert df.active_port == 8001 and df.switch_time == 10.0
+    assert df.active_config().temperature == 0.7
+    df.on_regime(Regime.BELOW, now=50.0)
+    assert df.active_port == 8000
+
+
+def test_metrics_export_text():
+    c = _controller()
+    c.route(list(range(64)), now=0.0)
+    text = c.metrics.export_text(now=0.0)
+    for name in ("game_saturation_state", "game_router_temperature",
+                 "game_routing_cost"):
+        assert name in text

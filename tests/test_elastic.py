@@ -1,0 +1,39 @@
+"""Elastic scaling, heartbeats, straggler mitigation."""
+import pytest
+
+from repro.training.elastic import (ElasticMesh, HeartbeatMonitor,
+                                    StragglerMitigator)
+
+
+def test_heartbeat_failure_detection():
+    hb = HeartbeatMonitor(timeout=10.0)
+    hb.beat(0, now=0.0)
+    hb.beat(1, now=0.0)
+    hb.beat(0, now=8.0)
+    assert hb.failed_hosts(now=12.0) == [1]
+    assert hb.alive_hosts(now=12.0) == [0]
+
+
+def test_elastic_mesh_shrinks_data_axis():
+    em = ElasticMesh(model_parallel=4)
+    assert em.best_shape(32) == (8, 4)
+    assert em.best_shape(28) == (7, 4)   # lost a host: data axis shrinks
+    assert em.best_shape(5) == (1, 4)
+    with pytest.raises(RuntimeError):
+        em.best_shape(3)                 # cannot satisfy model parallelism
+
+
+def test_straggler_detection_and_reassignment():
+    sm = StragglerMitigator(factor=1.5)
+    for step in range(8):
+        sm.record(0, 1.0)
+        sm.record(1, 1.1)
+        sm.record(2, 3.0)  # straggler
+    assert sm.stragglers() == [2]
+    shares = sm.reassignment(16)
+    assert sum(shares.values()) == 16
+    assert shares[2] < shares[0]         # slow host gets fewer microbatches
+
+
+def test_reassignment_handles_empty():
+    assert StragglerMitigator().reassignment(8) == {}

@@ -1,0 +1,74 @@
+"""jaxpr cost counter: exactness on known primitives, scan multiplication,
+remat recompute visibility."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.jaxpr_cost import cost_of
+
+
+def test_matmul_flops_exact():
+    a = jnp.zeros((8, 16))
+    b = jnp.zeros((16, 32))
+    c = cost_of(lambda x, y: x @ y, a, b)
+    assert c.flops == 2 * 8 * 16 * 32
+    # bytes: operands + result
+    assert c.bytes == (8 * 16 + 16 * 32 + 8 * 32) * 4
+
+
+def test_batched_einsum_flops():
+    a = jnp.zeros((4, 8, 16))
+    b = jnp.zeros((4, 16, 32))
+    c = cost_of(lambda x, y: jnp.einsum("bij,bjk->bik", x, y), a, b)
+    assert c.flops == 2 * 4 * 8 * 16 * 32
+
+
+def test_scan_multiplies_by_length():
+    w = jnp.zeros((16, 16))
+
+    def one(x):
+        return x @ w
+
+    def scanned(x):
+        def body(carry, _):
+            return carry @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    x = jnp.zeros((16, 16))
+    c1 = cost_of(one, x)
+    c10 = cost_of(scanned, x)
+    assert c10.flops == pytest.approx(10 * c1.flops, rel=0.01)
+
+
+def test_grad_includes_backward():
+    w = jnp.ones((32, 32))
+    x = jnp.ones((4, 32))
+
+    def loss(w):
+        return jnp.sum((x @ w) ** 2)
+
+    fwd = cost_of(loss, w)
+    both = cost_of(jax.grad(loss), w)
+    assert both.flops >= 1.9 * fwd.flops  # fwd + bwd matmul(s)
+
+
+def test_remat_adds_recompute():
+    w = jnp.ones((32, 32))
+    x = jnp.ones((4, 32))
+
+    def block(w):
+        h = x @ w
+        for _ in range(4):
+            h = jnp.tanh(h @ w)
+        return jnp.sum(h)
+
+    plain = cost_of(jax.grad(block), w)
+    remat = cost_of(jax.grad(jax.checkpoint(block)), w)
+    assert remat.flops > plain.flops  # recompute visible in the jaxpr
+
+
+def test_elementwise_and_reduce():
+    x = jnp.zeros((100,))
+    c = cost_of(lambda x: jnp.sum(x * 2.0), x)
+    assert 100 <= c.flops <= 310  # mul (100) + reduce (100) (+ broadcasting)

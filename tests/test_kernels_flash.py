@@ -1,0 +1,59 @@
+"""Pallas flash-attention kernel vs pure-jnp oracle: shape/dtype sweep
+(interpret mode on CPU; the identical kernel body compiles for TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+SHAPES = [
+    # (b, s, h, kh, hd)
+    (1, 64, 2, 2, 32),     # MHA
+    (2, 128, 4, 2, 64),    # GQA g=2
+    (1, 256, 8, 1, 64),    # MQA
+    (2, 96, 4, 4, 128),    # non-block-multiple seq (padding path)
+    (1, 128, 8, 2, 96),    # hd not a lane multiple
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(shape, dtype, causal):
+    b, s, h, kh, hd = shape
+    ks = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kh, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kh, hd), jnp.float32).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, blk_q=64, blk_k=64,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    atol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=atol, rtol=atol)
+
+
+def test_flash_block_size_invariance():
+    b, s, h, kh, hd = 1, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kh, hd))
+    v = jax.random.normal(ks[2], (b, s, kh, hd))
+    o1 = flash_attention(q, k, v, blk_q=32, blk_k=32, interpret=True)
+    o2 = flash_attention(q, k, v, blk_q=128, blk_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_flash_first_token_attends_only_itself():
+    """Causal: row 0 must equal v[0] exactly (softmax over one key)."""
+    b, s, h, hd = 1, 64, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd))
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(v[:, 0]),
+                               atol=1e-5)

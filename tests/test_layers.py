@@ -1,0 +1,102 @@
+"""Layer-level unit tests: RoPE, GQA, chunked attention, MLP variants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import layers as L
+
+
+@pytest.fixture
+def cfg():
+    return get_reduced("phi4-mini-3.8b")
+
+
+def test_rmsnorm_unit_scale():
+    p = L.rmsnorm_init(8, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 3, 8)) * 10,
+                    jnp.float32)
+    y = L.rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    assert jnp.allclose(rms, 1.0, atol=1e-3)
+
+
+def test_rope_relative_position_invariance():
+    """RoPE dot products depend only on relative position."""
+    hd = 32
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, hd)), jnp.float32)
+
+    def score(pq, pk):
+        cq, sq = L.rope_table(jnp.asarray([pq], jnp.int32), hd, 1e4)
+        ck, sk = L.rope_table(jnp.asarray([pk], jnp.int32), hd, 1e4)
+        qr = L.apply_rope(q, cq, sq)
+        kr = L.apply_rope(k, ck, sk)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(3, 7) - score(13, 17)) < 1e-3
+    assert abs(score(0, 5) - score(10, 15)) < 1e-3
+    assert abs(score(3, 7) - score(3, 8)) > 1e-5  # but absolute shift matters
+
+
+def test_chunked_sdpa_equals_plain():
+    rng = jax.random.PRNGKey(0)
+    b, s, h, hd = 2, 40, 4, 16
+    q = jax.random.normal(rng, (b, s, h, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, 2, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, 2, hd))
+    qp = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    full = L._sdpa_chunked(q, k, v, qp, 2, kind="causal", q_chunk=1024)
+    chunked = L._sdpa_chunked(q, k, v, qp, 2, kind="causal", q_chunk=16)
+    assert jnp.allclose(full, chunked, atol=1e-5)
+
+
+def test_gqa_equals_mha_with_replicated_kv(cfg):
+    """GQA with K<H must equal MHA whose K/V heads are replicated."""
+    cfg_gqa = dataclasses.replace(cfg, num_heads=4, num_kv_heads=2, head_dim=16)
+    cfg_mha = dataclasses.replace(cfg, num_heads=4, num_kv_heads=4, head_dim=16)
+    p = L.attention_init(jax.random.PRNGKey(0), cfg_gqa, jnp.float32)
+    p_mha = dict(p)
+    p_mha["wk"] = jnp.repeat(p["wk"], 2, axis=1)
+    p_mha["wv"] = jnp.repeat(p["wv"], 2, axis=1)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, cfg.d_model),
+                          jnp.float32)
+    o1, _ = L.attention(p, x, cfg_gqa)
+    o2, _ = L.attention(p_mha, x, cfg_mha)
+    assert jnp.allclose(o1, o2, atol=1e-2, rtol=1e-2)
+
+
+def test_causal_mask_blocks_future(cfg):
+    c = dataclasses.replace(cfg, num_heads=2, num_kv_heads=2, head_dim=16)
+    p = L.attention_init(jax.random.PRNGKey(0), c, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, c.d_model), jnp.float32)
+    o1, _ = L.attention(p, x, c)
+    x2 = x.at[:, -1].set(0.0)  # change only the last token
+    o2, _ = L.attention(p, x2, c)
+    assert jnp.allclose(o1[:, :-1], o2[:, :-1], atol=1e-5)  # prefix unaffected
+
+
+@pytest.mark.parametrize("act", ["swiglu", "squared_relu", "gelu"])
+def test_mlp_variants(cfg, act):
+    c = dataclasses.replace(cfg, activation=act, d_ff=32)
+    p = L.mlp_init(jax.random.PRNGKey(0), c, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, c.d_model), jnp.float32)
+    y = L.mlp(p, x, c)
+    assert y.shape == x.shape and jnp.all(jnp.isfinite(y))
+    if act == "swiglu":
+        assert "wg" in p
+    else:
+        assert "wg" not in p
+
+
+def test_squared_relu_nonnegative_preactivation(cfg):
+    c = dataclasses.replace(cfg, activation="squared_relu", d_ff=32)
+    p = L.mlp_init(jax.random.PRNGKey(0), c, jnp.float32)
+    p2 = dict(p, wd=jnp.abs(p["wd"]))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, c.d_model), jnp.float32)
+    y = L.mlp(p2, x, c)  # relu² ≥ 0, positive wd ⇒ y ≥ 0
+    assert float(jnp.min(y)) >= 0.0

@@ -1,0 +1,73 @@
+"""Game 1 (P/D allocation): variational equilibrium (Prop. 1) and the
+Planner's ±1 best-response dynamic with inertia."""
+import pytest
+
+from repro.core.planner import (Planner, PlannerConfig, social_optimum,
+                                variational_equilibrium)
+
+
+def v_ttft(gp):
+    return 100.0 / gp  # strictly convex decreasing
+
+
+def v_itl(gd):
+    return 25.0 / gd
+
+
+def test_variational_equilibrium_balances_marginals():
+    g = variational_equilibrium(v_ttft, v_itl, total=12)
+    # analytic: 100/gp² = 25/gd² ⇒ gp = 2·gd ⇒ gp = 8, gd = 4
+    assert g == 8
+
+
+def test_social_optimum_credits_prefill_externality():
+    """Remark 1: with a positive externality of prefill on decode, the social
+    optimum allocates ≥ the variational equilibrium to prefill."""
+    def v_itl_joint(gd, gp):
+        return 25.0 / gd + 30.0 / gp  # prefill starves decode when small
+    ve = variational_equilibrium(v_ttft, v_itl, total=12)
+    so = social_optimum(v_ttft, v_itl_joint, total=12)
+    assert so >= ve
+
+
+def test_planner_moves_toward_equilibrium():
+    """Fed the profiled *marginal* improvements (the paper's pre-deployment
+    response functions), the ±1 dynamic settles at the variational
+    equilibrium of Prop. 1."""
+    cfg = PlannerConfig(total_workers=12, adjust_interval=30.0,
+                        grace_intervals=0)
+    pl = Planner(config=cfg, prefill_workers=2, decode_workers=10)
+    t = 0.0
+    for _ in range(40):
+        t += 31.0
+        m_p = v_ttft(pl.prefill_workers) - v_ttft(pl.prefill_workers + 1)
+        m_d = v_itl(pl.decode_workers) - v_itl(pl.decode_workers + 1)
+        pl.step(t, ttft_violation=m_p, itl_violation=m_d)
+    ve = variational_equilibrium(v_ttft, v_itl, total=12)
+    assert abs(pl.prefill_workers - ve) <= 1
+
+
+def test_planner_rate_limited():
+    pl = Planner(config=PlannerConfig(adjust_interval=30.0),
+                 prefill_workers=1, decode_workers=2)
+    assert pl.step(31.0, 1.0, 0.0) == "to_prefill"
+    # immediate second call inside the interval: no move
+    assert pl.step(40.0, 1.0, 0.0) is None
+
+
+def test_planner_grace_period_after_decode_assignment():
+    cfg = PlannerConfig(adjust_interval=30.0, grace_intervals=3)
+    pl = Planner(config=cfg, prefill_workers=3, decode_workers=1)
+    assert pl.step(31.0, 0.0, 1.0) == "to_decode"
+    # within 3 intervals of grace: frozen even with strong signal
+    assert pl.step(80.0, 1.0, 0.0) is None
+    assert pl.step(120.0, 1.0, 0.0) is None
+    # grace expired (31 + 90 s): the planner may act again
+    assert pl.step(130.0, 1.0, 0.0) == "to_prefill"
+
+
+def test_planner_never_empties_a_pool():
+    pl = Planner(config=PlannerConfig(adjust_interval=1.0),
+                 prefill_workers=1, decode_workers=1)
+    assert pl.step(2.0, 10.0, 0.0) is None  # would empty decode
+    assert pl.step(4.0, 0.0, 10.0) is None  # would empty prefill

@@ -1,0 +1,93 @@
+"""PoA estimator (Eq. 12): Hungarian correctness, window semantics,
+regime-indicator behavior."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.poa import (CompletedRequest, PoATracker, hungarian,
+                            hungarian_jv)
+
+
+def _brute_force(cost):
+    n, m = cost.shape
+    best = np.inf
+    for perm in itertools.permutations(range(m), n):
+        best = min(best, cost[np.arange(n), list(perm)].sum())
+    return best
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_hungarian_optimal_vs_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    n, m = rng.integers(1, 5), rng.integers(5, 7)
+    cost = rng.random((n, m))
+    idx = hungarian(cost)
+    assert len(set(idx.tolist())) == n  # one-to-one
+    assert cost[np.arange(n), idx].sum() == pytest.approx(_brute_force(cost))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_pure_jv_matches_scipy(seed):
+    rng = np.random.default_rng(100 + seed)
+    n, m = rng.integers(2, 12), rng.integers(12, 20)
+    cost = rng.random((n, m))
+    a = hungarian(cost)
+    b = hungarian_jv(cost)
+    assert cost[np.arange(n), a].sum() == pytest.approx(
+        cost[np.arange(n), b].sum())
+
+
+def _req(i, latency, workers=2, t=0.0, overlap=None):
+    return CompletedRequest(
+        request_id=str(i), worker=i % workers, latency=latency,
+        overlap=overlap if overlap is not None else [0.0] * workers,
+        finish_time=t)
+
+
+def test_poa_scales_with_observed_latency():
+    tr = PoATracker(num_workers=2)
+    for i in range(64):
+        tr.record(_req(i, latency=1.0, t=float(i) * 0.1))
+    poa1 = tr.current_poa()
+    tr2 = PoATracker(num_workers=2)
+    for i in range(64):
+        tr2.record(_req(i, latency=3.0, t=float(i) * 0.1))
+    assert tr2.current_poa() == pytest.approx(3 * poa1, rel=1e-6)
+
+
+def test_window_count_cap():
+    tr = PoATracker(num_workers=2, window_count=16)
+    for i in range(100):
+        tr.record(_req(i, 1.0, t=float(i) * 0.01))
+    assert tr.window_size() == 16
+
+
+def test_window_time_cap():
+    tr = PoATracker(num_workers=2, window_s=5.0, window_count=1000)
+    for i in range(50):
+        tr.record(_req(i, 1.0, t=float(i)))
+    assert tr.window_size(now=49.0) <= 6
+
+
+def test_overlap_credit_reduces_opt():
+    tr = PoATracker(num_workers=2)
+    reqs_cold = [_req(i, 1.0, overlap=[0.0, 0.0]) for i in range(32)]
+    reqs_warm = [_req(i, 1.0, overlap=[1.0, 1.0]) for i in range(32)]
+    assert tr.opt_cost(reqs_warm) < tr.opt_cost(reqs_cold)
+
+
+def test_more_workers_lower_opt():
+    """The 1P/5D plateau sits above 1P/2D because OPT prices a lighter
+    balanced load per worker (paper §8.1)."""
+    reqs = [_req(i, 1.0, workers=2) for i in range(128)]
+    opt2 = PoATracker(num_workers=2).opt_cost(reqs)
+    reqs5 = [CompletedRequest(str(i), i % 5, 1.0, [0.0] * 5, 0.0)
+             for i in range(128)]
+    opt5 = PoATracker(num_workers=5).opt_cost(reqs5)
+    assert opt5 < opt2
+
+
+def test_empty_window_nan():
+    tr = PoATracker(num_workers=2)
+    assert np.isnan(tr.current_poa())

@@ -1,0 +1,112 @@
+"""Hypothesis property tests over the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kvbm import KVBlockManager
+from repro.core.poa import hungarian, hungarian_jv
+from repro.core.radix import KvIndexer
+from repro.core.router import KvPushRouter, KvRouterConfig
+from repro.core.saturation import DetectorConfig, Regime, SaturationDetector
+from repro.training.compression import dequantize_int8, quantize_int8
+
+tok_lists = st.lists(st.integers(0, 500), min_size=16, max_size=120)
+
+
+@settings(max_examples=40, deadline=None)
+@given(tokens=tok_lists, workers=st.integers(1, 5))
+def test_overlap_scores_in_unit_interval(tokens, workers):
+    ix = KvIndexer()
+    ix.insert(0, tokens)
+    scores = ix.overlap_scores(tokens, list(range(workers)))
+    assert all(0.0 <= s <= 1.0 for s in scores)
+    assert scores[0] == 1.0 or len(tokens) < ix.block_size
+
+
+@settings(max_examples=40, deadline=None)
+@given(tokens=tok_lists, extra=tok_lists)
+def test_overlap_monotone_under_insert(tokens, extra):
+    ix = KvIndexer()
+    ix.insert(0, tokens)
+    before = ix.overlap_scores(extra, [0])[0]
+    ix.insert(0, extra)
+    after = ix.overlap_scores(extra, [0])[0]
+    assert after >= before
+
+
+@settings(max_examples=30, deadline=None)
+@given(loads=st.lists(st.integers(0, 100), min_size=2, max_size=6),
+       tau=st.floats(0.0, 2.0), omega=st.floats(0.0, 1.0))
+def test_router_always_returns_healthy_worker(loads, tau, omega):
+    r = KvPushRouter(len(loads), KvRouterConfig(temperature=tau,
+                                                overlap_weight=omega))
+    for i, l in enumerate(loads):
+        r.workers[i].active_blocks = l
+    r.set_health(0, False)
+    if len(loads) > 1:
+        w, ov, overlaps = r.best_worker(list(range(64)))
+        assert w != 0
+        assert 0.0 <= ov <= 1.0
+        assert len(overlaps) == len(loads) - 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 30), st.booleans()),
+                    min_size=1, max_size=120),
+       cap=st.integers(1, 8))
+def test_kvbm_capacity_invariant(ops, cap):
+    kv = KVBlockManager({"G1": cap, "G2": cap, "G3": cap})
+    for block, is_access in ops:
+        if is_access:
+            kv.access(block)
+        else:
+            kv.allocate(block)
+    for t in ("G1", "G2", "G3"):
+        assert kv.tier_usage[t] <= kv.capacity[t]
+    assert sum(kv.tier_usage.values()) == len(kv.blocks)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(4, 7), st.integers(0, 10_000))
+def test_hungarian_never_worse_than_greedy(n, m, seed):
+    rng = np.random.default_rng(seed)
+    cost = rng.random((n, m))
+    idx = hungarian(cost)
+    hung = cost[np.arange(n), idx].sum()
+    # greedy row-by-row assignment
+    used = set()
+    greedy = 0.0
+    for i in range(n):
+        j = min((j for j in range(m) if j not in used),
+                key=lambda j: cost[i, j])
+        used.add(j)
+        greedy += cost[i, j]
+    assert hung <= greedy + 1e-9
+    jv = hungarian_jv(cost)
+    assert abs(cost[np.arange(n), jv].sum() - hung) < 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=64))
+def test_int8_quantization_error_bound(xs):
+    import jax.numpy as jnp
+    x = jnp.asarray(xs, jnp.float32)
+    q, scale = quantize_int8(x)
+    err = np.max(np.abs(np.asarray(dequantize_int8(q, scale) - x)))
+    assert err <= float(scale) / 2 + 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0.0, 20.0, allow_nan=False), min_size=3,
+                max_size=40))
+def test_detector_regime_monotone_in_ewma(vals):
+    """Whatever the sample path, the reported regime must match the EWMA
+    against the thresholds up to hysteresis lag (never inverted order)."""
+    d = SaturationDetector(DetectorConfig(theta1=1.0, theta2=5.0, alpha=0.5,
+                                          hysteresis_k=1, epsilon=0.0))
+    for i, v in enumerate(vals):
+        regime = d.observe(v, 5.0 * i)
+        if d.ewma >= 5.0:
+            assert regime == Regime.SATURATED
+        elif d.ewma < 1.0 and regime == Regime.SATURATED:
+            raise AssertionError("saturated while EWMA below θ1")

@@ -1,0 +1,74 @@
+"""KvIndexer radix tree: prefix sharing, overlap scores, TTL churn."""
+from repro.core.radix import BLOCK_SIZE, KvIndexer, block_hashes
+
+
+def toks(base, n=64):
+    return [base + i for i in range(n)]
+
+
+def test_block_hashes_prefix_chained():
+    a = block_hashes(toks(0, 64))
+    b = block_hashes(toks(0, 48))
+    assert a[:3] == b  # shared prefix ⇒ shared leading hashes
+    c = block_hashes([1] + toks(0, 63))
+    assert c[0] != a[0]  # first-block change changes every chained hash
+    assert c[1] != a[1]
+
+
+def test_partial_tail_block_ignored():
+    assert len(block_hashes(list(range(70)))) == 70 // BLOCK_SIZE
+
+
+def test_overlap_full_and_partial():
+    ix = KvIndexer()
+    ix.insert(0, toks(0, 64))
+    full, = ix.overlap_scores(toks(0, 64), [0])
+    assert full == 1.0
+    # same first 32 tokens, different tail
+    partial, = ix.overlap_scores(toks(0, 32) + toks(9000, 32), [0])
+    assert partial == 0.5
+    cold, = ix.overlap_scores(toks(5000, 64), [0])
+    assert cold == 0.0
+
+
+def test_overlap_per_worker_independent():
+    ix = KvIndexer()
+    ix.insert(0, toks(0, 64))
+    ix.insert(1, toks(1000, 64))
+    o = ix.overlap_scores(toks(0, 64), [0, 1])
+    assert o == [1.0, 0.0]
+
+
+def test_ttl_expiry():
+    ix = KvIndexer(ttl=2.0)
+    ix.insert(0, toks(0, 64), now=0.0)
+    assert ix.overlap_scores(toks(0, 64), [0], now=1.0)[0] == 1.0
+    assert ix.overlap_scores(toks(0, 64), [0], now=5.0)[0] == 0.0
+    ix.insert(0, toks(0, 64), now=6.0)  # refresh
+    assert ix.overlap_scores(toks(0, 64), [0], now=7.0)[0] == 1.0
+
+
+def test_eviction_removes_worker_claim():
+    ix = KvIndexer()
+    ix.insert(0, toks(0, 64))
+    ix.insert(1, toks(0, 64))
+    ix.remove_worker_blocks(0, toks(0, 64))
+    assert ix.overlap_scores(toks(0, 64), [0, 1]) == [0.0, 1.0]
+
+
+def test_clear_worker():
+    ix = KvIndexer()
+    ix.insert(0, toks(0, 64))
+    ix.insert(0, toks(1000, 64))
+    ix.clear_worker(0)
+    assert ix.num_blocks(0) == 0
+    assert ix.overlap_scores(toks(0, 64), [0]) == [0.0]
+
+
+def test_matched_blocks_monotone_under_insert():
+    ix = KvIndexer()
+    ix.insert(0, toks(0, 32))
+    m1 = ix.matched_blocks(0, toks(0, 64))
+    ix.insert(0, toks(0, 64))
+    m2 = ix.matched_blocks(0, toks(0, 64))
+    assert m2 >= m1

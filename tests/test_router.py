@@ -1,0 +1,95 @@
+"""Smart Router semantics (Eq. 1/2) + static baselines."""
+import collections
+
+import pytest
+
+from repro.core.radix import KvIndexer
+from repro.core.router import (KvPushRouter, KvRouterConfig, PowerOfTwoRouter,
+                               RandomRouter, RoundRobinRouter)
+
+TOKENS_A = list(range(64))
+TOKENS_B = list(range(1000, 1064))
+
+
+def test_argmin_at_tau_zero():
+    r = KvPushRouter(3, KvRouterConfig(temperature=0.0, overlap_weight=1.0))
+    r.workers[0].active_blocks = 5
+    r.workers[1].active_blocks = 1
+    r.workers[2].active_blocks = 9
+    w, _, _ = r.best_worker(TOKENS_A)
+    assert w == 1
+
+
+def test_cache_affinity_beats_small_load_gap():
+    r = KvPushRouter(2, KvRouterConfig(temperature=0.0, overlap_weight=1.0))
+    r.on_schedule(0, TOKENS_A)           # worker 0 warm for A
+    r.workers[0].active_blocks = 5       # slightly busier
+    r.workers[1].active_blocks = 0
+    w, ov, _ = r.best_worker(TOKENS_A)
+    assert w == 0 and ov == 1.0          # ω·saved(20) > load gap(5)
+
+
+def test_omega_zero_disables_affinity():
+    r = KvPushRouter(2, KvRouterConfig(temperature=0.0, overlap_weight=0.0))
+    r.on_schedule(0, TOKENS_A)
+    r.workers[0].active_blocks = 5
+    r.workers[1].active_blocks = 0
+    w, _, _ = r.best_worker(TOKENS_A)
+    assert w == 1                        # pure congestion game
+
+
+def test_high_temperature_spreads():
+    r = KvPushRouter(2, KvRouterConfig(temperature=50.0))
+    r.workers[0].active_blocks = 0
+    r.workers[1].active_blocks = 10
+    counts = collections.Counter(r.best_worker(TOKENS_A)[0]
+                                 for _ in range(400))
+    assert counts[0] > 100 and counts[1] > 100  # near-uniform
+
+
+def test_temperature_zero_vs_positive_distribution():
+    cfgs = KvRouterConfig(temperature=0.7)
+    r = KvPushRouter(2, cfgs)
+    r.workers[0].active_blocks = 0
+    r.workers[1].active_blocks = 10
+    counts = collections.Counter(r.best_worker(TOKENS_A)[0]
+                                 for _ in range(400))
+    assert counts[0] > counts[1] > 20    # biased but stochastic
+
+
+def test_unhealthy_workers_excluded():
+    r = KvPushRouter(3)
+    r.set_health(0, False)
+    seen = {r.best_worker(TOKENS_A)[0] for _ in range(20)}
+    assert 0 not in seen
+
+
+def test_router_config_override_per_request():
+    r = KvPushRouter(2, KvRouterConfig(temperature=0.0, overlap_weight=1.0))
+    r.on_schedule(0, TOKENS_A)
+    r.workers[0].active_blocks = 5
+    w_default, _, _ = r.best_worker(TOKENS_A)
+    w_override, _, _ = r.best_worker(
+        TOKENS_A, router_config_override=KvRouterConfig(overlap_weight=0.0))
+    assert w_default == 0 and w_override == 1
+
+
+def test_round_robin_cycles():
+    rr = RoundRobinRouter(3)
+    assert [rr.best_worker(TOKENS_A)[0] for _ in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_power_of_two_prefers_less_loaded():
+    r = KvPushRouter(4)
+    for w in range(4):
+        r.workers[w].active_blocks = w * 10
+    p2c = PowerOfTwoRouter(r, seed=0)
+    picks = [p2c.best_worker(TOKENS_A)[0] for _ in range(200)]
+    # worker 3 (most loaded) should almost never win
+    assert collections.Counter(picks)[3] < 10
+
+
+def test_on_complete_never_negative():
+    r = KvPushRouter(1)
+    r.on_complete(0, TOKENS_A)
+    assert r.workers[0].active_blocks == 0.0

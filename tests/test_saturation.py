@@ -1,0 +1,66 @@
+"""Saturation detector: EWMA (Eq. 10), regimes (Eq. 11), hysteresis."""
+import pytest
+
+from repro.core.saturation import DetectorConfig, Regime, SaturationDetector
+
+
+def test_ewma_exact():
+    d = SaturationDetector(DetectorConfig(alpha=0.3))
+    d.observe(1.0, 0.0)
+    assert d.ewma == pytest.approx(1.0)
+    d.observe(2.0, 5.0)
+    assert d.ewma == pytest.approx(0.3 * 2.0 + 0.7 * 1.0)
+
+
+def test_regime_thresholds_with_hysteresis():
+    cfg = DetectorConfig(theta1=0.3, theta2=2.0, alpha=1.0, hysteresis_k=2)
+    d = SaturationDetector(cfg)
+    assert d.observe(0.1, 0) == Regime.BELOW
+    assert d.observe(0.5, 5) == Regime.BELOW        # 1st sample above θ1
+    assert d.observe(0.5, 10) == Regime.TRANSITION  # k=2 confirmed
+    assert d.observe(3.0, 15) == Regime.TRANSITION
+    assert d.observe(3.0, 20) == Regime.SATURATED
+
+
+def test_downward_hysteresis_epsilon():
+    cfg = DetectorConfig(theta1=0.3, theta2=2.0, alpha=1.0,
+                         hysteresis_k=1, epsilon=0.05)
+    d = SaturationDetector(cfg)
+    d.observe(0.5, 0)
+    assert d.regime == Regime.TRANSITION
+    d.observe(0.28, 5)       # above θ1 − ε: stays TRANSITION
+    assert d.regime == Regime.TRANSITION
+    d.observe(0.2, 10)       # below θ1 − ε
+    assert d.regime == Regime.BELOW
+
+
+def test_oscillation_suppressed():
+    cfg = DetectorConfig(theta1=0.3, theta2=2.0, alpha=1.0, hysteresis_k=3)
+    d = SaturationDetector(cfg)
+    vals = [0.5, 0.1, 0.5, 0.1, 0.5, 0.1]  # never 3 consecutive
+    for i, v in enumerate(vals):
+        d.observe(v, 5.0 * i)
+    assert d.regime == Regime.BELOW
+    assert d.transitions == []
+
+
+def test_model_specific_thresholds():
+    c70 = DetectorConfig.for_model("llama-3.1-70b")
+    c340 = DetectorConfig.for_model("nemotron-4-340b")
+    assert (c70.theta1, c70.theta2) == (0.3, 2.0)
+    assert (c340.theta1, c340.theta2) == (1.0, 10.0)
+
+
+def test_threshold_from_baseline():
+    c = DetectorConfig.from_baseline_ttft(0.055)  # 70B baseline ≈ 55 ms
+    assert 0.15 <= c.theta1 <= 0.3                # paper: 3–5× baseline
+    assert c.theta2 == pytest.approx(10 * c.theta1)
+
+
+def test_history_and_transitions_logged():
+    cfg = DetectorConfig(theta1=0.3, theta2=2.0, alpha=1.0, hysteresis_k=1)
+    d = SaturationDetector(cfg)
+    d.observe(0.1, 0)
+    d.observe(5.0, 5)
+    assert len(d.history) == 2
+    assert d.transitions == [(5, 0, 2)]

@@ -1,0 +1,83 @@
+"""Sharding policy: divisibility fallbacks and FSDP+TP parameter heuristics.
+
+The policy only reads ``mesh.axis_names`` and ``mesh.devices.shape``, so a
+lightweight stub mesh lets these tests run on one CPU device.
+"""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.policy import ShardingPolicy
+from repro.sharding.specs import param_spec
+
+
+class StubMesh:
+    def __init__(self, shape, axes):
+        self.devices = np.empty(shape, dtype=object)
+        self.axis_names = axes
+
+
+@pytest.fixture
+def policy():
+    return ShardingPolicy(StubMesh((16, 16), ("data", "model")))
+
+
+@pytest.fixture
+def policy3d():
+    return ShardingPolicy(StubMesh((2, 16, 16), ("pod", "data", "model")))
+
+
+def test_batch_sharded_over_data(policy):
+    spec = policy.spec(("batch", "seq", "act_embed"), (256, 4096, 1024))
+    assert spec == P("data", None, None)
+
+
+def test_pod_axis_joins_batch(policy3d):
+    spec = policy3d.spec(("batch", "seq", "act_embed"), (256, 4096, 1024))
+    assert spec == P(("pod", "data"), None, None)
+
+
+def test_divisibility_fallback_drops_axis(policy):
+    # 24 heads not divisible by model=16 → replicated
+    spec = policy.spec(("batch", "seq", "heads", "head_dim"),
+                       (32, 128, 24, 128))
+    assert spec == P("data", None, None, None)
+    # 96 heads divisible → sharded
+    spec = policy.spec(("batch", "seq", "heads", "head_dim"),
+                       (32, 128, 96, 128))
+    assert spec == P("data", None, "model", None)
+
+
+def test_axis_used_once(policy):
+    # both dims want "model": only the first gets it
+    spec = policy.spec(("heads", "act_mlp"), (32, 1024))
+    assert spec == P("model", None)
+
+
+def test_long_seq_rule(policy):
+    spec = policy.spec(("stack", "long_seq", "kv_heads"), (8, 524288, 8))
+    assert spec[1] == "data"
+
+
+def test_param_spec_fsdp_tp(policy):
+    # biggest dim → model, second → data
+    spec = param_spec("['stack']['p0']['mlp']['wu']", (96, 18432, 73728), policy)
+    assert spec == P(None, "data", "model")
+    # embedding special case: vocab → model, d → data
+    spec = param_spec("['embed']", (256000, 18432), policy)
+    assert spec == P("model", "data")
+    # 1-D: replicated
+    spec = param_spec("['final_norm']['scale']", (18432,), policy)
+    assert spec == P(None)
+
+
+def test_param_spec_indivisible_replicates(policy):
+    spec = param_spec("['x']", (7, 13), policy)
+    assert spec == P(None, None)
+
+
+def test_rule_override():
+    pol = ShardingPolicy(StubMesh((4, 2), ("data", "model")),
+                         rules={"act_mlp": ("data",)})
+    spec = pol.spec(("batch", "act_mlp"), (1, 8))  # batch falls back (1%4)
+    assert spec == P(None, "data")

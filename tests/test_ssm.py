@@ -1,0 +1,158 @@
+"""Chunked SSD / mLSTM / sLSTM against naive per-step recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import ssm as S
+
+
+# ------------------------------------------------------------------ SSD ----
+
+def _ssd_naive(x, dt, a_log, b_in, c_in):
+    """Per-step recurrence: h_t = a_t h_{t-1} + dt_t B_t ⊗ x_t; y = C_t h."""
+    b, s, h, p = x.shape
+    n = b_in.shape[-1]
+    a = np.exp(-np.exp(np.asarray(a_log, np.float64)))  # placeholder shape (h,)
+    state = np.zeros((b, h, n, p))
+    ys = np.zeros((b, s, h, p))
+    xf = np.asarray(x, np.float64)
+    dtf = np.asarray(dt, np.float64)
+    bf = np.asarray(b_in, np.float64)
+    cf = np.asarray(c_in, np.float64)
+    A = np.exp(np.asarray(a_log, np.float64))
+    for t in range(s):
+        decay = np.exp(-dtf[:, t, :] * A[None, :])       # (b,h)
+        upd = np.einsum("bn,bh,bhp->bhnp", bf[:, t], dtf[:, t], xf[:, t])
+        state = state * decay[:, :, None, None] + upd
+        ys[:, t] = np.einsum("bn,bhnp->bhp", cf[:, t], state)
+    return ys, state
+
+
+@pytest.mark.parametrize("s,chunk", [(32, 8), (40, 16), (16, 16), (24, 64)])
+def test_ssd_chunked_matches_naive(s, chunk):
+    rng = np.random.default_rng(0)
+    b, h, p, n = 2, 3, 4, 5
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    a_log = jnp.asarray(np.log(rng.uniform(1, 8, size=(h,))), jnp.float32)
+    b_in = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    c_in = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    y, st = S.ssd_chunked(x, dt, a_log, b_in, c_in, chunk)
+    y_ref, st_ref = _ssd_naive(x, dt, a_log, b_in, c_in)
+    np.testing.assert_allclose(np.asarray(y, np.float64), y_ref,
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(st, np.float64), st_ref,
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_chunk_size_invariance():
+    rng = np.random.default_rng(1)
+    b, s, h, p, n = 1, 48, 2, 4, 3
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(b, s, h)), jnp.float32)
+    a_log = jnp.zeros((h,), jnp.float32)
+    b_in = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    c_in = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    y1, s1 = S.ssd_chunked(x, dt, a_log, b_in, c_in, 8)
+    y2, s2 = S.ssd_chunked(x, dt, a_log, b_in, c_in, 24)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+
+def test_mamba_block_decode_matches_fullseq():
+    cfg = get_reduced("jamba-v0.1-52b")
+    params = S.mamba_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 17, cfg.d_model),
+                          jnp.float32)
+    y_full, cache_full = S.mamba_block(params, x, cfg)
+    # run first 16 tokens, then decode token 17 with the cache
+    _, cache = S.mamba_block(params, x[:, :16], cfg)
+    y_step, _ = S.mamba_block(params, x[:, 16:17], cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(y_step[:, 0]),
+                               np.asarray(y_full[:, 16]),
+                               atol=3e-2, rtol=3e-2)
+
+
+# ---------------------------------------------------------------- mLSTM ----
+
+def _mlstm_naive(q, k, v, log_i, log_f):
+    b, s, h, p = q.shape
+    qf = np.asarray(q, np.float64) * (p ** -0.5)
+    kf = np.asarray(k, np.float64)
+    vf = np.asarray(v, np.float64)
+    li = np.asarray(log_i, np.float64)
+    lf = np.asarray(log_f, np.float64)
+    C = np.zeros((b, h, p, p))
+    n = np.zeros((b, h, p))
+    m = np.full((b, h), -np.inf)
+    hs = np.zeros((b, s, h, p))
+    for t in range(s):
+        m_new = np.maximum(lf[:, t] + m, li[:, t])
+        dec = np.exp(lf[:, t] + m - m_new)
+        inp = np.exp(li[:, t] - m_new)
+        C = C * dec[..., None, None] + inp[..., None, None] * np.einsum(
+            "bhp,bhq->bhpq", kf[:, t], vf[:, t])
+        n = n * dec[..., None] + inp[..., None] * kf[:, t]
+        num = np.einsum("bhp,bhpq->bhq", qf[:, t], C)
+        den = np.maximum(np.abs(np.einsum("bhp,bhp->bh", qf[:, t], n)),
+                         np.exp(-m_new))
+        hs[:, t] = num / den[..., None]
+        m = m_new
+    return hs, (C, n, m)
+
+
+@pytest.mark.parametrize("s,chunk", [(24, 8), (32, 16), (16, 64)])
+def test_mlstm_chunked_matches_naive(s, chunk):
+    rng = np.random.default_rng(2)
+    b, h, p = 2, 2, 6
+    q = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    log_i = jnp.asarray(rng.normal(size=(b, s, h)), jnp.float32)
+    log_f = jnp.asarray(np.log(rng.uniform(0.5, 0.99, size=(b, s, h))),
+                        jnp.float32)
+    hs, (C, n, m) = S.mlstm_chunked(q, k, v, log_i, log_f, chunk)
+    hs_ref, (C_ref, n_ref, m_ref) = _mlstm_naive(q, k, v, log_i, log_f)
+    np.testing.assert_allclose(np.asarray(hs, np.float64), hs_ref,
+                               atol=2e-3, rtol=2e-3)
+    # states match up to the shared stabilizer normalization
+    np.testing.assert_allclose(
+        np.asarray(C, np.float64) * np.exp(np.asarray(m))[..., None, None],
+        C_ref * np.exp(m_ref)[..., None, None], atol=2e-3, rtol=2e-3)
+
+
+def test_mlstm_step_continues_chunked():
+    rng = np.random.default_rng(3)
+    b, s, h, p = 1, 16, 2, 4
+    mk = lambda shape: jnp.asarray(rng.normal(size=shape), jnp.float32)
+    q, k, v = mk((b, s + 1, h, p)), mk((b, s + 1, h, p)), mk((b, s + 1, h, p))
+    log_i = mk((b, s + 1, h))
+    log_f = jnp.asarray(np.log(rng.uniform(0.5, 0.99, size=(b, s + 1, h))),
+                        jnp.float32)
+    full, _ = S.mlstm_chunked(q, k, v, log_i, log_f, 8)
+    _, st = S.mlstm_chunked(q[:, :s], k[:, :s], v[:, :s],
+                            log_i[:, :s], log_f[:, :s], 8)
+    h_step, _ = S.mlstm_step(q[:, s], k[:, s], v[:, s],
+                             log_i[:, s], log_f[:, s], st)
+    np.testing.assert_allclose(np.asarray(h_step), np.asarray(full[:, s]),
+                               atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------- sLSTM ----
+
+def test_slstm_step_vs_scan():
+    cfg = get_reduced("xlstm-125m")
+    params = S.slstm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, cfg.d_model),
+                          jnp.float32)
+    y_full, cache_full = S.slstm_block(params, x, cfg)
+    _, cache = S.slstm_block(params, x[:, :8], cfg)
+    y_step, cache_step = S.slstm_block(params, x[:, 8:9], cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(y_step[:, 0]),
+                               np.asarray(y_full[:, 8]),
+                               atol=3e-2, rtol=3e-2)
+    np.testing.assert_allclose(np.asarray(cache_step["c"]),
+                               np.asarray(cache_full["c"]),
+                               atol=2e-3, rtol=2e-3)
