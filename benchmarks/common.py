@@ -31,9 +31,8 @@ def timed(fn: Callable, *args, **kwargs):
 
 def run_sim(name: str, topo: str, concurrency: int, hold_s: float = 120.0,
             seed: int = 0, **kw):
-    from repro.serving.simulator import ClusterConfig, Simulator
-    from repro.serving.workload import WorkloadConfig
-    sim = Simulator(ClusterConfig.for_model(name, topo),
-                    WorkloadConfig.single_level(concurrency, hold_s=hold_s),
-                    seed=seed, **kw)
-    return sim.run()
+    """Closed-loop ramp sweep point via the scenario registry's ``ramp``
+    factory (benchmarks never inline cluster/workload configs)."""
+    from repro.serving.scenarios import ramp
+    return ramp(name, topo, concurrency, hold_s=hold_s, **kw) \
+        .build(seed=seed).run()

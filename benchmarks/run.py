@@ -15,13 +15,40 @@ import sys
 import time
 
 
+def _scenario_sweep() -> None:
+    """Run every registry scenario (fast variant) and emit one CSV row per
+    scenario: wall time per simulated request + headline stats."""
+    from benchmarks.common import emit, save_json
+    from repro.serving.scenarios import build_simulator, list_scenarios
+    rows = {}
+    for name in list_scenarios():
+        t0 = time.perf_counter()
+        sim = build_simulator(name, seed=0, fast=True)
+        res = sim.run()
+        dt = (time.perf_counter() - t0) * 1e6
+        s = res.overall()
+        rows[name] = dict(completed=len(res.completed), poa=s.poa,
+                          ttft_p99=s.ttft_p99, rps=s.rps)
+        emit(f"scenario_{name}", dt / max(len(res.completed), 1),
+             f"n={len(res.completed)};ttft_p99={s.ttft_p99:.3f}s;"
+             f"rps={s.rps:.1f}")
+    save_json("scenario_sweep", rows)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="shorter holds / fewer iterations")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="print the scenario registry and exit")
     args = ap.parse_args()
+    if args.list_scenarios:
+        from repro.serving.scenarios import get_scenario, list_scenarios
+        for name in list_scenarios():
+            print(f"{name:24s} {get_scenario(name, fast=True).description}")
+        return
     hold = 60.0 if args.fast else 120.0
     iters = 2 if args.fast else 3
 
@@ -41,6 +68,7 @@ def main() -> None:
         "baselines": lambda: baselines_static_routing.run(min(hold, 90.0)),
         "kernels": bench_kernels.run,
         "router": bench_router.run,
+        "scenarios": _scenario_sweep,
     }
     only = set(args.only.split(",")) if args.only else None
 

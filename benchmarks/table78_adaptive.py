@@ -8,21 +8,21 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, save_json
-from repro.serving.simulator import ClusterConfig, Simulator
-from repro.serving.workload import WorkloadConfig
+from repro.serving.scenarios import build_simulator
 
 PHASES = ["Below", "Saturated", "Recovery"]
-CONFIGS = [("nemotron-4-340b", "1P/2D"), ("llama-3.1-70b", "1P/2D"),
-           ("llama-3.1-70b", "1P/5D")]
+CONFIGS = [("nemotron-4-340b", "1P/2D", "340b-1p2d-spike"),
+           ("llama-3.1-70b", "1P/2D", "70b-1p2d-spike"),
+           ("llama-3.1-70b", "1P/5D", "70b-1p5d-spike")]
 
 
 def run(iterations: int = 3):
     t0 = time.perf_counter()
     report = {}
-    for model, topo in CONFIGS:
+    for model, topo, scenario in CONFIGS:
         report[f"{model} {topo}"] = {}
         print(f"\n# Tables 7/8 — Experiment 3: {model} {topo} "
-              f"(n={iterations} iterations)")
+              f"(scenario {scenario}, n={iterations} iterations)")
         print(f"{'strategy':>9} {'phase':>10} {'PoA':>16} {'TTFT P99 (s)':>16} "
               f"{'ITL P99':>9} {'rps':>6}")
         for adaptive in (False, True):
@@ -31,9 +31,8 @@ def run(iterations: int = 3):
                          for p in range(3)}
             switches = []
             for it in range(iterations):
-                sim = Simulator(ClusterConfig.for_model(model, topo),
-                                WorkloadConfig.load_spike(),
-                                adaptive=adaptive, seed=it + 1)
+                sim = build_simulator(scenario, seed=it + 1,
+                                      adaptive=adaptive)
                 res = sim.run()
                 if res.switch_time is not None:
                     switches.append(res.switch_time)

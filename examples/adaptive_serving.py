@@ -1,23 +1,25 @@
 """Adaptive vs static routing under a load spike (mini Experiment 3).
 
-Runs the calibrated 70B 1P/5D cluster simulator through the paper's
-C = 32 → 128 → 32 spike with both strategies and prints the per-phase
-comparison — the controller detects the TRANSITION regime and switches
-router parameters per Table 2.
+Runs the ``70b-1p5d-spike`` registry scenario (the paper's C = 32 → 128 → 32
+spike on the calibrated 70B 1P/5D cluster) with both strategies and prints
+the per-phase comparison — the controller detects the TRANSITION regime and
+switches router parameters per Table 2.
 
     PYTHONPATH=src python examples/adaptive_serving.py
 """
-from repro.serving.simulator import ClusterConfig, Simulator
-from repro.serving.workload import WorkloadConfig
+from repro.serving.scenarios import get_scenario
+
+SCENARIO = "70b-1p5d-spike"
 
 
 def main():
-    cluster = ClusterConfig.for_model("llama-3.1-70b", "1P/5D")
+    scenario = get_scenario(SCENARIO)
+    cluster = scenario.cluster
+    print(f"scenario: {SCENARIO} — {scenario.description}")
     print("cluster:", cluster.name, f"1P/{cluster.num_decode}D",
           f"(prefill ceiling {cluster.prefill_rate} rps)")
     for adaptive in (False, True):
-        sim = Simulator(cluster, WorkloadConfig.load_spike(),
-                        adaptive=adaptive, seed=1)
+        sim = scenario.build(seed=1, adaptive=adaptive)
         res = sim.run()
         tag = "ADAPTIVE" if adaptive else "STATIC  "
         print(f"\n{tag} — per-phase results")

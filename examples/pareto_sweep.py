@@ -8,8 +8,7 @@ measurably move the PoA below saturation, and start to matter at the knee.
 import numpy as np
 
 from repro.core.router import KvRouterConfig
-from repro.serving.simulator import ClusterConfig, Simulator
-from repro.serving.workload import WorkloadConfig
+from repro.serving.scenarios import build_simulator
 
 TAUS = [0.0, 0.3, 0.7, 1.0]
 OMEGAS = [0.0, 0.3, 0.7, 1.0]
@@ -19,9 +18,8 @@ def sweep(concurrency: int):
     grid = np.zeros((len(TAUS), len(OMEGAS)))
     for i, tau in enumerate(TAUS):
         for j, om in enumerate(OMEGAS):
-            sim = Simulator(
-                ClusterConfig.for_model("llama-3.1-70b", "1P/2D"),
-                WorkloadConfig.single_level(concurrency, hold_s=60.0),
+            sim = build_simulator(
+                "70b-1p2d-ramp", concurrency=concurrency, hold_s=60.0,
                 router_config=KvRouterConfig(temperature=tau,
                                              overlap_weight=om))
             grid[i, j] = sim.run().overall().poa

@@ -115,8 +115,17 @@ class PoATracker:
     capacity: int = 64                  # C_j column replication per worker
     params: LatencyParams = POA_FROZEN
     cache_weight: float = POA_CACHE_WEIGHT
+    capacities: Sequence[float] = ()    # per-worker relative capacity (hetero)
     _window: Deque[CompletedRequest] = field(default_factory=deque)
     _last: float = float("nan")
+
+    def _capacity_shares(self) -> Optional[np.ndarray]:
+        """Per-worker share of total decode capacity, or None when the pool
+        is homogeneous (legacy uniform path, bit-exact with the seed)."""
+        if not self.capacities or len(set(self.capacities)) <= 1:
+            return None
+        caps = np.asarray(self.capacities, dtype=np.float64)
+        return caps / caps.sum()
 
     def record(self, req: CompletedRequest):
         self._window.append(req)
@@ -139,17 +148,28 @@ class PoATracker:
             return 0.0
         cap = max(1, min(self.capacity, n))
         w = self.num_workers
-        cols = w * cap
         from repro.core.latency import latency
-        n_bar = n / w                                     # balanced frozen load
-        base = float(latency(np.asarray(n_bar), self.params))
+        shares = self._capacity_shares()
+        if shares is None:
+            # homogeneous: every column carries the Eq. 9 latency at the
+            # uniform balanced load n̄ = |W|/m
+            base_w = np.full(w, float(latency(np.asarray(n / w), self.params)))
+            reps = np.full(w, cap, dtype=np.int64)
+        else:
+            # heterogeneous: the counterfactual balanced load of worker j is
+            # capacity-proportional, n̄_j = |W|·C_j/ΣC, and its column count
+            # scales with its share of the replication budget
+            base_w = np.asarray([float(latency(np.asarray(n * s), self.params))
+                                 for s in shares])
+            reps = np.maximum(1, np.round(shares * w * cap)).astype(np.int64)
+        cols = int(reps.sum())
         cost = np.zeros((n, cols))
         for i, rq in enumerate(reqs):
             ov = np.asarray(rq.overlap, dtype=np.float64)
             if ov.shape[0] != w:
                 ov = np.zeros(w)
-            per_w = base - self.cache_weight * ov          # (w,)
-            cost[i] = np.repeat(per_w, cap)
+            per_w = base_w - self.cache_weight * ov        # (w,)
+            cost[i] = np.repeat(per_w, reps)
         if n > cols:
             idx = hungarian(cost[:cols])
             per = cost[np.arange(cols), idx]

@@ -33,6 +33,7 @@ class WorkerState:
     worker_id: int
     active_blocks: int = 0             # b_j^active
     healthy: bool = True
+    capacity: float = 1.0              # relative decode capacity (slots)
 
 
 class KvPushRouter:
@@ -55,6 +56,22 @@ class KvPushRouter:
     # liberty recorded in DESIGN.md).
     PREFILL_BLOCK_SCALE = 20.0
 
+    def _normalized_load(self, ids: List[int]) -> List[float]:
+        """b_j^active normalized by relative worker capacity.
+
+        Heterogeneous pools (mixed-generation GPUs) expose different
+        ``capacity`` values; the load proxy is rescaled so a worker at 50%
+        of its slots competes equally regardless of absolute slot count.
+        Homogeneous pools (all capacities equal) take the identity path —
+        raw block counts — so legacy behavior is bit-exact.
+        """
+        caps = [self.workers[wid].capacity for wid in ids]
+        if len(set(caps)) <= 1:
+            return [float(self.workers[wid].active_blocks) for wid in ids]
+        ref = sum(caps) / len(caps)
+        return [self.workers[wid].active_blocks * (ref / cap)
+                for wid, cap in zip(ids, caps)]
+
     def costs(self, tokens: Sequence[int],
               config: Optional[KvRouterConfig] = None, now: float = 0.0
               ) -> Tuple[List[int], List[float], List[float]]:
@@ -62,10 +79,10 @@ class KvPushRouter:
         cfg = config or self.config
         ids = [w for w, st in self.workers.items() if st.healthy]
         overlaps = self.indexer.overlap_scores(tokens, ids, now)
+        loads = self._normalized_load(ids)
         costs = []
-        for wid, ov in zip(ids, overlaps):
+        for ov, b_active in zip(overlaps, loads):
             b_prefill = self.PREFILL_BLOCK_SCALE * (1.0 - ov)
-            b_active = self.workers[wid].active_blocks
             costs.append(cfg.overlap_weight * b_prefill + b_active)
         return ids, costs, overlaps
 
@@ -118,6 +135,10 @@ class KvPushRouter:
     def set_health(self, worker_id: int, healthy: bool):
         self.workers[worker_id].healthy = healthy
 
+    def set_capacity(self, worker_id: int, capacity: float):
+        """Declare a worker's relative decode capacity (heterogeneity)."""
+        self.workers[worker_id].capacity = max(capacity, 1e-9)
+
 
 # ------------------------------------------------------ static baselines ----
 
@@ -153,7 +174,11 @@ class PowerOfTwoRouter:
     def best_worker(self, tokens, router_config_override=None):
         ids = [w for w, st in self.router.workers.items() if st.healthy]
         a, b = self._rng.sample(ids, 2) if len(ids) >= 2 else (ids[0], ids[0])
-        wa = self.router.workers[a].active_blocks
-        wb = self.router.workers[b].active_blocks
+        # compare capacity-normalized utilization so heterogeneous pools
+        # don't starve the small workers (ties break to the first pick)
+        wa = (self.router.workers[a].active_blocks
+              / self.router.workers[a].capacity)
+        wb = (self.router.workers[b].active_blocks
+              / self.router.workers[b].capacity)
         w = a if wa <= wb else b
         return w, 0.0, [0.0] * len(ids)

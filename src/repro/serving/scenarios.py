@@ -1,0 +1,303 @@
+"""Named, reusable serving scenarios — the registry behind tests,
+examples and benchmarks.
+
+A *scenario* bundles the three inputs a simulator run needs:
+
+* a :class:`~repro.serving.simulator.ClusterConfig` (possibly with a
+  heterogeneous ``decode_workers`` pool and/or multiple prefill workers),
+* a :class:`~repro.serving.workload.WorkloadConfig` (closed-loop ramp,
+  open-loop Poisson/burst/diurnal, or JSONL trace replay),
+* simulator keyword arguments (router config, routing policy, adaptive
+  controller flag).
+
+Usage::
+
+    from repro.serving.scenarios import build_simulator, list_scenarios
+
+    sim = build_simulator("hetero-decode-mixed", seed=0, fast=True)
+    result = sim.run()
+
+``get_scenario(name, **overrides)`` returns the :class:`Scenario` without
+building; every factory accepts ``fast=True`` for a short-horizon variant
+(used by the smoke tests) plus factory-specific knobs (``concurrency``,
+``hold_s``, ``rate``, ``duration_s``, …).  Benchmarks parameterize the
+``ramp``/``spike`` factories directly; examples and tests look scenarios
+up by name.  Registered names span both cluster axes (homogeneous /
+heterogeneous decode pools, single / pooled prefill) and all workload
+modes — the paper's claim is that the three-regime PoA structure is a
+property of the *mechanics*, so it should survive every one of these.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
+
+from repro.serving.simulator import (ClusterConfig, DecodeWorkerSpec,
+                                     Simulator)
+from repro.serving.workload import ArrivalProcess, WorkloadConfig
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named (cluster, workload, simulator-kwargs) bundle."""
+    name: str
+    description: str
+    cluster: ClusterConfig
+    workload: WorkloadConfig
+    sim_kwargs: Mapping[str, Any] = field(default_factory=dict)
+
+    def build(self, seed: int = 0, **overrides) -> Simulator:
+        """Instantiate the simulator; ``overrides`` win over the
+        scenario's own ``sim_kwargs`` (e.g. ``adaptive=True``)."""
+        kw = {**self.sim_kwargs, **overrides}
+        return Simulator(self.cluster, self.workload, seed=seed, **kw)
+
+
+# ------------------------------------------------------------ factories ----
+
+def ramp(model: str, topo: str, concurrency: int, hold_s: float = 120.0,
+         ramp_s: float = 30.0, **sim_kwargs) -> Scenario:
+    """Closed-loop single-level ramp — the paper's Experiment 1/2 shape."""
+    return Scenario(
+        name=f"{model}-{topo}-ramp-C{concurrency}",
+        description=f"closed-loop ramp to C={concurrency} on {model} {topo}",
+        cluster=ClusterConfig.for_model(model, topo),
+        workload=WorkloadConfig.single_level(concurrency, hold_s=hold_s,
+                                             ramp_s=ramp_s),
+        sim_kwargs=sim_kwargs)
+
+
+def spike(model: str, topo: str, low: int = 32, high: int = 128,
+          durations=(120.0, 180.0, 120.0), **sim_kwargs) -> Scenario:
+    """Closed-loop three-phase load spike — Experiment 3's shape."""
+    return Scenario(
+        name=f"{model}-{topo}-spike",
+        description=f"C={low}→{high}→{low} spike on {model} {topo}",
+        cluster=ClusterConfig.for_model(model, topo),
+        workload=WorkloadConfig.load_spike(low=low, high=high,
+                                           durations=durations),
+        sim_kwargs=sim_kwargs)
+
+
+def _mixed_pool(big_cap: int = 56, small_cap: int = 24) -> Tuple[DecodeWorkerSpec, ...]:
+    """A mixed-generation decode pool: one current-gen card plus two
+    previous-gen cards with fewer slots, less HBM, slower decode and a
+    slower interconnect."""
+    big = DecodeWorkerSpec(decode_cap=big_cap, g1_blocks=100_000,
+                           itl_base=0.0090, kv_transfer=0.012)
+    small = DecodeWorkerSpec(decode_cap=small_cap, g1_blocks=40_000,
+                             itl_base=0.0135, itl_slope=0.00001,
+                             kv_transfer=0.020)
+    return (big, small, small)
+
+
+# ------------------------------------------------------------- registry ----
+
+SCENARIOS: Dict[str, Callable[..., Scenario]] = {}
+
+
+def register(name: str, factory: Callable[..., Scenario]) -> None:
+    SCENARIOS[name] = factory
+
+
+def list_scenarios() -> List[str]:
+    return sorted(SCENARIOS)
+
+
+def get_scenario(name: str, **overrides) -> Scenario:
+    try:
+        factory = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"available: {', '.join(list_scenarios())}") from None
+    return factory(**overrides)
+
+
+def build_simulator(name: str, seed: int = 0, **overrides) -> Simulator:
+    """Look up ``name`` and instantiate its simulator.  Factory knobs
+    (``fast``, ``concurrency``, …) and simulator kwargs (``adaptive``,
+    ``routing_policy``, …) are split automatically: anything the factory
+    does not consume is forwarded to ``Scenario.build``."""
+    sim_keys = {"router_config", "adaptive", "detector_config",
+                "routing_policy", "regime_params"}
+    sim_kw = {k: overrides.pop(k) for k in list(overrides)
+              if k in sim_keys}
+    return get_scenario(name, **overrides).build(seed=seed, **sim_kw)
+
+
+def _reg(name: str, doc: str):
+    """Decorator: register ``factory`` under ``name`` with ``doc``."""
+    def wrap(factory):
+        def named(**kw) -> Scenario:
+            sc = factory(**kw)
+            return replace(sc, name=name, description=doc)
+        register(name, named)
+        return factory
+    return wrap
+
+
+# Closed-loop ramps (the paper's calibrated topologies) -----------------------
+
+@_reg("70b-1p2d-ramp", "70B 1P/2D closed-loop ramp (paper Exp. 1 shape)")
+def _70b_ramp(concurrency: int = 64, hold_s: float = 120.0,
+              fast: bool = False, **kw) -> Scenario:
+    if fast:
+        kw.setdefault("ramp_s", 5.0)
+        hold_s = 20.0
+    return ramp("llama-3.1-70b", "1P/2D", concurrency, hold_s=hold_s, **kw)
+
+
+@_reg("340b-1p2d-ramp", "340B 1P/2D closed-loop ramp (paper Exp. 1 shape)")
+def _340b_ramp(concurrency: int = 64, hold_s: float = 120.0,
+               fast: bool = False, **kw) -> Scenario:
+    if fast:
+        kw.setdefault("ramp_s", 5.0)
+        hold_s = 20.0
+    return ramp("nemotron-4-340b", "1P/2D", concurrency, hold_s=hold_s, **kw)
+
+
+# Closed-loop spikes (Experiment 3) ------------------------------------------
+
+def _register_spike(name: str, doc: str, model: str, topo: str) -> None:
+    @_reg(name, doc)
+    def _spike(low: int = 32, high: int = 128, fast: bool = False,
+               **kw) -> Scenario:
+        durations = (15.0, 20.0, 15.0) if fast else (120.0, 180.0, 120.0)
+        return spike(model, topo, low=low, high=high,
+                     durations=kw.pop("durations", durations), **kw)
+
+
+_register_spike("70b-1p2d-spike", "70B 1P/2D C=32→128→32 spike",
+                "llama-3.1-70b", "1P/2D")
+_register_spike("70b-1p5d-spike", "70B 1P/5D C=32→128→32 spike",
+                "llama-3.1-70b", "1P/5D")
+_register_spike("340b-1p2d-spike", "340B 1P/2D C=32→128→32 spike",
+                "nemotron-4-340b", "1P/2D")
+
+
+# Open-loop arrival processes ------------------------------------------------
+
+@_reg("70b-2p4d-poisson",
+      "70B with a 2-worker prefill pool and 4 decode workers under "
+      "open-loop Poisson arrivals")
+def _70b_poisson(rate: float = 12.0, duration_s: float = 120.0,
+                 fast: bool = False, **kw) -> Scenario:
+    if fast:
+        duration_s = 25.0
+    return Scenario(
+        name="", description="",
+        cluster=ClusterConfig.for_model("llama-3.1-70b", "2P/4D"),
+        workload=WorkloadConfig.poisson(rate=rate, duration_s=duration_s),
+        sim_kwargs=kw)
+
+
+@_reg("340b-1p5d-burst",
+      "340B 1P/5D under bursty on/off arrivals (quiet 4 rps, bursts 24 rps)")
+def _340b_burst(rate: float = 4.0, burst_rate: float = 24.0,
+                duration_s: float = 180.0, fast: bool = False, **kw) -> Scenario:
+    if fast:
+        duration_s = 25.0
+    return Scenario(
+        name="", description="",
+        cluster=ClusterConfig.for_model("nemotron-4-340b", "1P/5D"),
+        workload=WorkloadConfig.bursty(rate=rate, burst_rate=burst_rate,
+                                       duration_s=duration_s,
+                                       on_s=8.0, off_s=20.0),
+        sim_kwargs=kw)
+
+
+@_reg("70b-1p2d-diurnal",
+      "70B 1P/2D under a diurnal sinusoid arrival rate (period 120 s)")
+def _70b_diurnal(rate: float = 10.0, duration_s: float = 240.0,
+                 period_s: float = 120.0, fast: bool = False, **kw) -> Scenario:
+    if fast:
+        duration_s, period_s = 24.0, 12.0
+    return Scenario(
+        name="", description="",
+        cluster=ClusterConfig.for_model("llama-3.1-70b", "1P/2D"),
+        workload=WorkloadConfig.diurnal(rate=rate, duration_s=duration_s,
+                                        period_s=period_s, amplitude=0.8),
+        sim_kwargs=kw)
+
+
+# Heterogeneous decode pools -------------------------------------------------
+
+@_reg("hetero-decode-mixed",
+      "70B with a mixed-generation decode pool (1 big + 2 small cards), "
+      "closed-loop ramp")
+def _hetero_mixed(concurrency: int = 64, hold_s: float = 120.0,
+                  fast: bool = False, **kw) -> Scenario:
+    if fast:
+        hold_s = 20.0
+    base = ClusterConfig.for_model("llama-3.1-70b", "1P/3D")
+    return Scenario(
+        name="", description="",
+        cluster=replace(base, decode_workers=_mixed_pool()),
+        workload=WorkloadConfig.single_level(concurrency, hold_s=hold_s,
+                                             ramp_s=5.0 if fast else 30.0),
+        sim_kwargs=kw)
+
+
+@_reg("hetero-decode-burst",
+      "mixed-generation decode pool under bursty open-loop arrivals — "
+      "capacity-normalized routing is what keeps the small cards sane")
+def _hetero_burst(rate: float = 6.0, burst_rate: float = 30.0,
+                  duration_s: float = 180.0, fast: bool = False,
+                  **kw) -> Scenario:
+    if fast:
+        duration_s = 25.0
+    base = ClusterConfig.for_model("llama-3.1-70b", "1P/3D")
+    return Scenario(
+        name="", description="",
+        cluster=replace(base, decode_workers=_mixed_pool()),
+        workload=WorkloadConfig.bursty(rate=rate, burst_rate=burst_rate,
+                                       duration_s=duration_s,
+                                       on_s=6.0, off_s=18.0),
+        sim_kwargs=kw)
+
+
+# Trace replay ---------------------------------------------------------------
+
+def example_trace_records(n: int = 120, horizon_s: float = 30.0) -> List[dict]:
+    """A deterministic synthetic trace following the JSONL schema: arrival
+    times thicken toward the middle of the horizon (a mini load wave),
+    templates cycle with the popularity skew, output lengths alternate."""
+    records = []
+    for i in range(n):
+        u = i / max(n - 1, 1)
+        # quadratic time warp: denser arrivals mid-horizon
+        t = horizon_s * (u - 0.35 * u * (1.0 - u) * 2.0)
+        records.append({
+            "t": round(max(t, 0.0), 4),
+            "template": (i * 7) % 5,
+            "input_tokens": 96 if i % 3 else 160,
+            "output_tokens": 128 if i % 2 else 256,
+        })
+    return records
+
+
+@_reg("trace-replay",
+      "deterministic synthetic JSONL-schema trace replayed on 70B 1P/2D")
+def _trace_replay(n: int = 120, horizon_s: float = 30.0,
+                  fast: bool = False, **kw) -> Scenario:
+    if fast:
+        n, horizon_s = 60, 20.0
+    return Scenario(
+        name="", description="",
+        cluster=ClusterConfig.for_model("llama-3.1-70b", "1P/2D"),
+        workload=WorkloadConfig.from_records(
+            example_trace_records(n, horizon_s)),
+        sim_kwargs=kw)
+
+
+# Routing-policy baseline ----------------------------------------------------
+
+@_reg("70b-1p2d-rr-baseline",
+      "70B 1P/2D ramp under static round-robin routing (§9.2 baseline)")
+def _70b_rr(concurrency: int = 64, hold_s: float = 120.0,
+            fast: bool = False, **kw) -> Scenario:
+    if fast:
+        kw.setdefault("ramp_s", 5.0)
+        hold_s = 20.0
+    kw.setdefault("routing_policy", "round_robin")
+    return ramp("llama-3.1-70b", "1P/2D", concurrency, hold_s=hold_s, **kw)

@@ -16,6 +16,15 @@ around an event-driven cluster model with the paper's causal channels:
 * template traffic is mildly skewed (realistic popularity), which is what
   lets cache-affinity herding concentrate load.
 
+The cluster model generalizes along three scenario axes (see
+``repro.serving.scenarios`` for the named registry): a prefill *pool*
+(``num_prefill`` workers draining one shared queue), a possibly
+heterogeneous decode pool (per-worker ``DecodeWorkerSpec`` — admission
+cap, HBM blocks, ITL, KV-transfer latency — with capacity-normalized
+router loads and capacity-weighted PoA counterfactuals), and three
+workload modes (closed-loop ramps, open-loop Poisson/burst/diurnal
+arrivals, JSONL trace replay).
+
 Closed-loop clients maintain the workload's target concurrency. Calibrated
 per model (340B / 70B; Section 7) so the paper's regime structure — PoA
 plateau below the knee, first post-knee grid point at C=128, TTFT explosion
@@ -47,12 +56,34 @@ TEMPLATE_POPULARITY = (0.35, 0.25, 0.20, 0.12, 0.08)
 
 
 @dataclass(frozen=True)
+class DecodeWorkerSpec:
+    """Per-decode-worker capacity profile (heterogeneous pools).
+
+    A mixed-generation GPU pool is expressed as a tuple of these: newer
+    cards get a larger ``decode_cap``/``g1_blocks`` and smaller
+    ``itl_base``; remote nodes get a larger ``kv_transfer``.
+    """
+    decode_cap: int = 60              # admission slots (transfer/batch)
+    g1_blocks: int = 100_000          # HBM KV-block capacity
+    itl_base: float = 0.0090          # inter-token latency at low load (s)
+    itl_slope: float = 0.000005       # load dependence (bandwidth-bound)
+    kv_transfer: float = 0.012        # prefill→decode KV transfer latency (s)
+
+
+@dataclass(frozen=True)
 class ClusterConfig:
-    """Calibrated per model/topology (paper Section 7.3/8)."""
+    """Calibrated per model/topology (paper Section 7.3/8).
+
+    Homogeneous clusters use the scalar per-worker fields below; a
+    heterogeneous decode pool is declared by ``decode_workers`` (a tuple of
+    :class:`DecodeWorkerSpec`), which overrides the scalars and pins
+    ``num_decode`` to its length.  ``num_prefill > 1`` models a prefill
+    pool draining one shared queue.
+    """
     name: str = "llama-3.1-70b"
     num_prefill: int = 1
     num_decode: int = 2
-    prefill_rate: float = 47.0        # cache-warm requests/s ceiling
+    prefill_rate: float = 47.0        # cache-warm requests/s ceiling per worker
     prefill_base: float = 0.015       # pipelined prefill latency component (s)
     miss_penalty: float = 0.65        # extra prefill work on a full cache miss
     itl_base: float = 0.0090          # inter-token latency at low load (s)
@@ -63,16 +94,33 @@ class ClusterConfig:
     service_sigma: float = 0.5        # lognormal service jitter (batching)
     cache_ttl: float = 3.0            # radix-claim freshness (LRU churn model)
     metrics_interval: float = 1.0     # event-plane load-metric staleness (s)
+    decode_workers: Tuple[DecodeWorkerSpec, ...] = ()
+
+    def __post_init__(self):
+        if self.decode_workers and self.num_decode != len(self.decode_workers):
+            object.__setattr__(self, "num_decode", len(self.decode_workers))
+
+    @property
+    def worker_specs(self) -> Tuple[DecodeWorkerSpec, ...]:
+        """Resolved per-worker specs (homogeneous scalars expanded)."""
+        if self.decode_workers:
+            return self.decode_workers
+        return tuple(DecodeWorkerSpec(
+            decode_cap=self.decode_cap, g1_blocks=self.g1_blocks,
+            itl_base=self.itl_base, itl_slope=self.itl_slope,
+            kv_transfer=self.kv_transfer) for _ in range(self.num_decode))
 
     @classmethod
     def for_model(cls, name: str, topology: str = "1P/2D") -> "ClusterConfig":
-        nd = int(topology.split("/")[1].rstrip("D"))
+        np_str, nd_str = topology.split("/")
+        npf = int(np_str.rstrip("Pp"))
+        nd = int(nd_str.rstrip("Dd"))
         if "340b" in name.lower() or "nemotron" in name.lower():
-            return cls(name="nemotron-4-340b", num_decode=nd,
+            return cls(name="nemotron-4-340b", num_prefill=npf, num_decode=nd,
                        prefill_rate=19.0, prefill_base=0.030,
                        itl_base=0.0214, kv_transfer=0.030,
                        decode_cap=58 if nd <= 2 else 30)
-        return cls(name="llama-3.1-70b", num_decode=nd,
+        return cls(name="llama-3.1-70b", num_prefill=npf, num_decode=nd,
                    prefill_rate=47.0 if nd <= 2 else 49.0,
                    prefill_base=0.015, itl_base=0.0090,
                    kv_transfer=0.012,
@@ -117,15 +165,21 @@ class Simulator:
                  regime_params: Optional[dict] = None):
         self.cluster = cluster
         self.workload = workload
+        self.specs = cluster.worker_specs
         self.now = 0.0
         self._events: List[Tuple[float, int, str, object]] = []
         self._eid = itertools.count()
         self.rng = np.random.default_rng(seed)
+        # dedicated stream for open-loop arrival sampling so closed-loop
+        # runs stay byte-identical to the pre-scenario simulator
+        self.arrival_rng = np.random.default_rng([seed, 0xA221])
 
         self.router = KvPushRouter(cluster.num_decode,
                                    router_config or KvRouterConfig(),
                                    seed=seed)
         self.router.indexer.ttl = cluster.cache_ttl
+        for w, spec in enumerate(self.specs):
+            self.router.set_capacity(w, float(spec.decode_cap))
         if routing_policy == "round_robin":
             self.policy = RoundRobinRouter(cluster.num_decode)
         elif routing_policy == "random":
@@ -141,15 +195,18 @@ class Simulator:
         self.dual = DualFrontend()
         self.regime_params = dict(regime_params or REGIME_PARAMS)
         self.metrics = MetricsRegistry()
-        self.poa = PoATracker(num_workers=cluster.num_decode, window_s=30.0)
-        self.kvbm = [KVBlockManager({"G1": cluster.g1_blocks}, w)
-                     for w in range(cluster.num_decode)]
+        self.poa = PoATracker(num_workers=cluster.num_decode, window_s=30.0,
+                              capacities=tuple(float(s.decode_cap)
+                                               for s in self.specs))
+        self.kvbm = [KVBlockManager({"G1": spec.g1_blocks}, w)
+                     for w, spec in enumerate(self.specs)]
 
         # prefill pool state
         self.prefill_busy = [False] * cluster.num_prefill
         self.prefill_queue: List[SimRequest] = []
         # decode pool state: running + transfer-stalled per worker
         self.decode_running = [0] * cluster.num_decode
+        self.peak_decode_running = [0] * cluster.num_decode
         self.transfer_queue: List[List[SimRequest]] = [
             [] for _ in range(cluster.num_decode)]
 
@@ -170,21 +227,34 @@ class Simulator:
     # ---------------------------------------------------------- client ------
 
     def _maybe_submit(self):
+        """Closed-loop client: top the in-flight count up to the target
+        (no-op for open-loop/trace workloads, whose target is 0)."""
         target = self.workload.concurrency_at(self.now)
         while self.in_flight < target:
-            rid = next(self._rid)
             template = int(self.rng.choice(
                 len(TEMPLATE_POPULARITY), p=TEMPLATE_POPULARITY))
-            req = SimRequest(rid=rid, template=template,
-                             tokens=template_tokens(
-                                 template, self.workload.input_tokens),
-                             output_tokens=self.workload.output_tokens,
-                             submit_t=self.now,
-                             phase=self.workload.phase_of(self.now))
-            self.in_flight += 1
-            self._route(req)
-            self.prefill_queue.append(req)
-            self._dispatch_prefill()
+            self._submit(template, self.workload.input_tokens,
+                         self.workload.output_tokens)
+
+    def _on_arrival(self, entry):
+        """Open-loop/trace arrival (a TraceEntry): submit unconditionally —
+        arrivals do not wait for completions."""
+        template = entry.template
+        if template < 0:  # open-loop: sample from the popularity skew
+            template = int(self.rng.choice(
+                len(TEMPLATE_POPULARITY), p=TEMPLATE_POPULARITY))
+        self._submit(template, entry.input_tokens, entry.output_tokens)
+
+    def _submit(self, template: int, input_tokens: int, output_tokens: int):
+        req = SimRequest(rid=next(self._rid), template=template,
+                         tokens=template_tokens(template, input_tokens),
+                         output_tokens=output_tokens,
+                         submit_t=self.now,
+                         phase=self.workload.phase_of(self.now))
+        self.in_flight += 1
+        self._route(req)
+        self.prefill_queue.append(req)
+        self._dispatch_prefill()
 
     # ---------------------------------------------------------- routing -----
 
@@ -233,14 +303,15 @@ class Simulator:
         """Prefill finished: KV transfer to the decode worker, subject to its
         admission cap (stalls here are the herding pathology)."""
         w = req.decode_worker
-        if self.decode_running[w] >= self.cluster.decode_cap:
+        if self.decode_running[w] >= self.specs[w].decode_cap:
             self.transfer_queue[w].append(req)
             return
         self._admit_decode(req)
 
     def _admit_decode(self, req: SimRequest):
         w = req.decode_worker
-        transfer = self.cluster.kv_transfer * (1.0 - req.overlap)
+        spec = self.specs[w]
+        transfer = spec.kv_transfer * (1.0 - req.overlap)
         req.prefill_end = self.now + transfer
         req.decode_start = req.prefill_end
         self.router.indexer.insert(w, req.tokens, self.now)
@@ -248,8 +319,9 @@ class Simulator:
             self.kvbm[w].allocate(h)
             self.kvbm[w].access(h)
         self.decode_running[w] += 1
-        itl = (self.cluster.itl_base
-               + self.cluster.itl_slope * self.decode_running[w])
+        self.peak_decode_running[w] = max(self.peak_decode_running[w],
+                                          self.decode_running[w])
+        itl = spec.itl_base + spec.itl_slope * self.decode_running[w]
         dur = req.output_tokens * itl
         self._push(req.decode_start + dur, "decode_done", req)
 
@@ -324,17 +396,29 @@ class Simulator:
         total = self.workload.total_duration()
         self._push(0.0, "poll")
         self._push(0.0, "sync")
-        t = 0.0
-        while t < total:  # client ticks follow the ramp
-            self._push(t, "tick")
-            t += 1.0
+        if self.workload.mode == "closed":
+            t = 0.0
+            while t < total:  # client ticks follow the ramp
+                self._push(t, "tick")
+                t += 1.0
+        else:  # open-loop/trace: arrivals are pre-materialized events
+            for entry in self.workload.arrivals(self.arrival_rng):
+                self._push(entry.t, "arrive", entry)
+        # Closed-loop keeps the legacy fixed drain margin (in-flight work is
+        # bounded by the concurrency target).  Open-loop/trace arrivals don't
+        # wait for completions, so overload — the regime these modes exist to
+        # study — can queue far more than 60 s of backlog; drain it fully so
+        # overall() prices every arrival instead of a survivor subset.
+        closed = self.workload.mode == "closed"
         while self._events:
             t, _, kind, payload = heapq.heappop(self._events)
-            if t > total + 60.0:  # drain margin
+            if closed and t > total + 60.0:  # drain margin
                 break
             self.now = t
             if kind == "tick":
                 self._maybe_submit()
+            elif kind == "arrive":
+                self._on_arrival(payload)
             elif kind == "prefill_busy_done":
                 self._on_prefill_busy_done(*payload)
             elif kind == "prefill_compute_done":

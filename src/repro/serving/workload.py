@@ -1,13 +1,44 @@
-"""Workload generation (paper Section 7.4).
+"""Workload generation (paper Section 7.4) — closed-loop, open-loop, trace.
 
-Short-chat profile: 5 prompt templates × 128 input tokens, 256 max output
-tokens, deterministic generation.  Closed-loop clients hold a target
-concurrency via a semaphore; each phase has a linear ramp then a hold.
+Three workload modes, selected by ``WorkloadConfig.mode``:
+
+``closed``
+    The paper's short-chat profile: 5 prompt templates × 128 input tokens,
+    256 max output tokens, deterministic generation.  Closed-loop clients
+    hold a target concurrency via a semaphore; each phase has a linear ramp
+    then a hold.
+
+``open``
+    Open-loop arrival processes decoupled from service completions: Poisson
+    (stationary rate), bursty on/off (MMPP-style two-rate switching), and a
+    diurnal sinusoid (nonhomogeneous Poisson via thinning).  These are the
+    non-stationary traffic shapes the scenario registry exercises — under
+    open-loop arrivals saturation is an input property, not an emergent one.
+
+``trace``
+    Replay of a recorded request trace.  The JSONL schema is one object per
+    line with fields::
+
+        {"t": <arrival time, s>,            # required, non-decreasing
+         "template": <int>,                 # optional, default 0
+         "input_tokens": <int>,             # optional, default workload's
+         "output_tokens": <int>}            # optional, default workload's
+
+    Load a file with :meth:`WorkloadConfig.from_trace_file` or build one
+    in-memory with :meth:`WorkloadConfig.from_records`.
+
+All modes are deterministic given the simulator seed: open-loop arrival
+times are drawn from a dedicated generator so closed-loop runs are
+byte-identical to the pre-scenario-subsystem simulator.
 """
 from __future__ import annotations
 
+import json
+import math
 from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
 
 NUM_TEMPLATES = 5
 INPUT_TOKENS = 128
@@ -28,11 +59,86 @@ class Phase:
 
 
 @dataclass(frozen=True)
+class ArrivalProcess:
+    """Open-loop arrival process spec.
+
+    ``poisson``  — homogeneous Poisson at ``rate`` req/s.
+    ``burst``    — on/off switching: ``burst_rate`` during ``on_s``-long
+                   bursts, ``rate`` during ``off_s``-long quiet periods.
+    ``diurnal``  — nonhomogeneous Poisson with intensity
+                   rate·(1 + amplitude·sin(2πt/period_s)), sampled by
+                   thinning against the peak rate.
+    """
+    kind: str = "poisson"          # poisson | burst | diurnal
+    rate: float = 10.0             # baseline arrival rate (req/s)
+    burst_rate: float = 40.0       # on-phase rate for kind="burst"
+    on_s: float = 10.0             # burst duration
+    off_s: float = 30.0            # quiet duration
+    period_s: float = 120.0        # diurnal period
+    amplitude: float = 0.8         # diurnal modulation depth, in [0, 1)
+
+    def times(self, duration_s: float, rng: np.random.Generator) -> List[float]:
+        """Arrival times in [0, duration_s), deterministic given ``rng``."""
+        if self.kind == "poisson":
+            return self._homogeneous(self.rate, 0.0, duration_s, rng)
+        if self.kind == "burst":
+            out: List[float] = []
+            t = 0.0
+            while t < duration_s:
+                end_on = min(t + self.on_s, duration_s)
+                out.extend(self._homogeneous(self.burst_rate, t, end_on, rng))
+                t = end_on
+                end_off = min(t + self.off_s, duration_s)
+                out.extend(self._homogeneous(self.rate, t, end_off, rng))
+                t = end_off
+            return out
+        if self.kind == "diurnal":
+            peak = self.rate * (1.0 + self.amplitude)
+            cand = self._homogeneous(peak, 0.0, duration_s, rng)
+            out = []
+            for t in cand:
+                lam = self.rate * (1.0 + self.amplitude
+                                   * math.sin(2.0 * math.pi * t / self.period_s))
+                if rng.random() * peak <= lam:
+                    out.append(t)
+            return out
+        raise ValueError(f"unknown arrival kind {self.kind!r}")
+
+    @staticmethod
+    def _homogeneous(rate: float, t0: float, t1: float,
+                     rng: np.random.Generator) -> List[float]:
+        if rate <= 0.0 or t1 <= t0:
+            return []
+        out = []
+        t = t0
+        while True:
+            t += float(rng.exponential(1.0 / rate))
+            if t >= t1:
+                return out
+            out.append(t)
+
+
+@dataclass(frozen=True)
+class TraceEntry:
+    """One replayed request. ``template < 0`` means sample from popularity."""
+    t: float
+    template: int = 0
+    input_tokens: int = INPUT_TOKENS
+    output_tokens: int = OUTPUT_TOKENS
+
+
+@dataclass(frozen=True)
 class WorkloadConfig:
-    phases: Tuple[Phase, ...]
+    phases: Tuple[Phase, ...] = ()
     input_tokens: int = INPUT_TOKENS
     output_tokens: int = OUTPUT_TOKENS
     num_templates: int = NUM_TEMPLATES
+    mode: str = "closed"                       # closed | open | trace
+    arrival: Optional[ArrivalProcess] = None   # mode="open"
+    duration_s: float = 0.0                    # mode="open"
+    trace: Tuple[TraceEntry, ...] = ()         # mode="trace"
+
+    # ------------------------------------------------------ constructors ----
 
     @classmethod
     def single_level(cls, concurrency: int, hold_s: float = 120.0,
@@ -47,11 +153,74 @@ class WorkloadConfig:
                            Phase(high, 10.0, durations[1]),
                            Phase(low, 0.0, durations[2])))
 
+    @classmethod
+    def open_loop(cls, arrival: ArrivalProcess, duration_s: float,
+                  **kw) -> "WorkloadConfig":
+        return cls(mode="open", arrival=arrival, duration_s=duration_s, **kw)
+
+    @classmethod
+    def poisson(cls, rate: float, duration_s: float, **kw) -> "WorkloadConfig":
+        return cls.open_loop(ArrivalProcess("poisson", rate=rate),
+                             duration_s, **kw)
+
+    @classmethod
+    def bursty(cls, rate: float, burst_rate: float, duration_s: float,
+               on_s: float = 10.0, off_s: float = 30.0, **kw) -> "WorkloadConfig":
+        return cls.open_loop(
+            ArrivalProcess("burst", rate=rate, burst_rate=burst_rate,
+                           on_s=on_s, off_s=off_s), duration_s, **kw)
+
+    @classmethod
+    def diurnal(cls, rate: float, duration_s: float, period_s: float = 120.0,
+                amplitude: float = 0.8, **kw) -> "WorkloadConfig":
+        return cls.open_loop(
+            ArrivalProcess("diurnal", rate=rate, period_s=period_s,
+                           amplitude=amplitude), duration_s, **kw)
+
+    @classmethod
+    def from_records(cls, records: Sequence[dict], **kw) -> "WorkloadConfig":
+        """Build a trace workload from dicts following the JSONL schema."""
+        defaults = dict(input_tokens=kw.get("input_tokens", INPUT_TOKENS),
+                        output_tokens=kw.get("output_tokens", OUTPUT_TOKENS))
+        entries = tuple(sorted(
+            (TraceEntry(t=float(r["t"]),
+                        template=int(r.get("template", 0)),
+                        input_tokens=int(r.get("input_tokens",
+                                               defaults["input_tokens"])),
+                        output_tokens=int(r.get("output_tokens",
+                                                defaults["output_tokens"])))
+             for r in records), key=lambda e: e.t))
+        return cls(mode="trace", trace=entries, **kw)
+
+    @classmethod
+    def from_trace_file(cls, path, **kw) -> "WorkloadConfig":
+        """Load a JSONL trace (see module docstring for the schema)."""
+        records = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line and not line.startswith("#"):
+                    records.append(json.loads(line))
+        return cls.from_records(records, **kw)
+
+    # ----------------------------------------------------------- queries ----
+
     def total_duration(self) -> float:
+        if self.mode == "open":
+            return self.duration_s
+        if self.mode == "trace":
+            return self.trace[-1].t if self.trace else 0.0
         return sum(p.ramp_s + p.hold_s for p in self.phases)
 
     def concurrency_at(self, t: float) -> int:
-        """Target concurrency at absolute time t (linear ramps)."""
+        """Target concurrency at absolute time t (linear ramps).
+
+        Open-loop and trace modes have no concurrency target (arrivals do
+        not wait for completions) — returns 0 so the closed-loop client
+        never submits.
+        """
+        if self.mode != "closed":
+            return 0
         t0 = 0.0
         prev = 0
         for p in self.phases:
@@ -66,10 +235,30 @@ class WorkloadConfig:
         return 0
 
     def phase_of(self, t: float):
-        """Index of the phase active at time t (ramp attributed to its phase)."""
+        """Index of the phase active at time t (ramp attributed to its phase).
+        Open-loop/trace workloads are single-phase (index 0)."""
+        if self.mode != "closed" or not self.phases:
+            return 0
         t0 = 0.0
         for i, p in enumerate(self.phases):
             t0 += p.ramp_s + p.hold_s
             if t < t0:
                 return i
         return len(self.phases) - 1
+
+    def arrivals(self, rng: np.random.Generator) -> List[TraceEntry]:
+        """Materialized arrival list for open/trace modes ([] for closed).
+
+        Open-loop entries carry ``template=-1`` — the simulator samples the
+        template from its popularity distribution at arrival time, matching
+        closed-loop template statistics.
+        """
+        if self.mode == "trace":
+            return list(self.trace)
+        if self.mode == "open":
+            assert self.arrival is not None, "open mode needs an arrival spec"
+            return [TraceEntry(t=t, template=-1,
+                               input_tokens=self.input_tokens,
+                               output_tokens=self.output_tokens)
+                    for t in self.arrival.times(self.duration_s, rng)]
+        return []

@@ -30,6 +30,9 @@ print("JSON:" + json.dumps({
 
 @pytest.mark.slow
 def test_dryrun_cell_on_8_devices():
+    import jax
+    if not hasattr(jax.sharding, "AxisType"):
+        pytest.skip("jax too old for explicit mesh axis_types (needs >=0.5)")
     env = dict(os.environ, PYTHONPATH="src")
     env.pop("JAX_PLATFORMS", None)
     out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,

@@ -1,6 +1,12 @@
 """Hypothesis property tests over the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional test dependency; pip install -e '.[test]' to enable")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.kvbm import KVBlockManager
 from repro.core.poa import hungarian, hungarian_jv

@@ -9,6 +9,9 @@ from repro.models import build_model
 from repro.serving.disagg import DisaggregatedCluster, ServeRequest
 from repro.serving.workload import template_tokens
 
+# real-model end-to-end runs (jit compiles per arch): tier-2 only
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def cluster_setup():

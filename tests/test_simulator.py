@@ -69,6 +69,7 @@ def test_detector_fires_at_saturation():
     assert max(p["regime"] for p in below.poll_log) == 0
 
 
+@pytest.mark.slow
 def test_adaptive_improves_saturated_ttft():
     """Experiment 3 direction: adaptive ≤ static on saturated-phase TTFT."""
     ttft = {}

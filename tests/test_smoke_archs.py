@@ -11,6 +11,10 @@ import pytest
 from repro.configs import ASSIGNED_ARCHS, get_reduced
 from repro.models import build_model
 
+# full cross-architecture sweep (~4 min on CPU): excluded from the tier-1
+# fast lane; per-layer correctness stays covered by test_layers/test_ssm
+pytestmark = pytest.mark.slow
+
 
 def _nodrop(cfg):
     if cfg.moe is None:

@@ -2,6 +2,7 @@
 loop (detector → controller → router) exercised through the simulator, plus
 the headline paper claims at reproduction scale."""
 import numpy as np
+import pytest
 
 from repro.core.saturation import Regime
 from repro.serving.simulator import ClusterConfig, Simulator
@@ -36,6 +37,7 @@ def test_same_first_postknee_grid_point_both_models():
         assert d_knee > 4 * max(d_low, 1e-5), (name, t)
 
 
+@pytest.mark.slow
 def test_variance_collapse_under_adaptive():
     """Paper §8.5 'Stability': adaptive strategy has much lower
     iteration-to-iteration variance in the saturated phase."""

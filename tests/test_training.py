@@ -14,6 +14,7 @@ from repro.training.train_loop import TrainConfig, Trainer, make_train_step
 SHAPE = ShapeConfig("t", 64, 8, "train")
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     tr = Trainer(get_reduced("stablelm-3b"), SHAPE, TrainConfig(remat=False))
     hist = tr.run(25)
@@ -21,6 +22,7 @@ def test_loss_decreases():
         np.mean([h["loss"] for h in hist[:5]]) - 0.15
 
 
+@pytest.mark.slow
 def test_grad_accum_equivalence():
     """grad_accum=2 must match grad_accum=1 on the same global batch."""
     cfg = get_reduced("phi4-mini-3.8b")
@@ -39,6 +41,7 @@ def test_grad_accum_equivalence():
     assert d < 1e-4
 
 
+@pytest.mark.slow
 def test_remat_matches_no_remat():
     cfg = get_reduced("minitron-4b")
     model = build_model(cfg)
@@ -51,6 +54,7 @@ def test_remat_matches_no_remat():
                                    atol=1e-4, rtol=1e-3)
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_bit_exact(tmp_path):
     """Train 6 steps straight vs 3 + checkpoint + restore + 3: identical."""
     cfg = get_reduced("stablelm-3b")
