@@ -4,7 +4,7 @@ from __future__ import annotations
 import json
 import pathlib
 import time
-from typing import Callable, Optional
+from typing import Callable
 
 REPORT_DIR = pathlib.Path("reports/benchmarks")
 

@@ -1,0 +1,83 @@
+"""Prop. 5 (Game 2): sweep per-worker G1 HBM capacity and watch the
+PoA_KV = 1 → contested transition.
+
+PoA_KV is measured as the Eq. 6 aggregate cache cost of the run divided by
+the cost of the seed-matched coordinated counterfactual (the same workload
+on effectively-unbounded G1 — the social optimum proxy).  With G1 large
+enough for the whole working set, ρ stays below 1, no block is ever
+demoted, the trajectory is bit-identical to the counterfactual and
+PoA_KV = 1 exactly.  Shrinking G1 past the working set pushes ρ over 1:
+the KVBM demotes, overlap claims are invalidated for coherence, and
+requests pay Eq. 6 onboarding latency (G2/G3 hits) or full recompute
+(misses) — PoA_KV rises above 1.
+
+CSV: one row per G1 capacity; ``derived`` carries ρ_max, demotions,
+onboarded-request count, TTFT P99, and PoA_KV.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, save_json
+
+G1_SWEEP = (16, 32, 48, 96, 256, 100_000)
+UNBOUNDED = G1_SWEEP[-1]
+
+
+def _eq6_cost(res) -> float:
+    """Aggregate Eq. 6 cache cost of a run (G1 hits at α_G1, onboards at
+    their quoted latency, misses at the γ recompute cost)."""
+    from repro.core.kvbm import RECOMPUTE_COST, TIER_COST
+    total = 0.0
+    for r in res.completed:
+        n = max(len(r.hashes), 1)
+        g1_hits = r.overlap * n
+        onboarded = r.onboard_frac * n
+        misses = max(n - g1_hits - onboarded, 0.0)
+        total += (g1_hits * TIER_COST["G1"] + r.onboard_latency
+                  + misses * RECOMPUTE_COST)
+    return total
+
+
+def run(hold: float = 40.0, seeds=(0, 1, 2), concurrency: int = 96) -> None:
+    from repro.serving.scenarios import build_simulator
+
+    rows = {}
+    for g1 in G1_SWEEP:
+        t0 = time.perf_counter()
+        per_seed, ttfts, n_done = [], [], 0
+        rho_max, demotions, onboarded = 0.0, 0, 0
+        for seed in seeds:
+            sim = build_simulator("cache-pressure-70b", seed=seed,
+                                  g1_blocks=g1, hold_s=hold,
+                                  concurrency=concurrency)
+            res = sim.run()
+            per_seed.append(_eq6_cost(res))
+            ttfts.append(res.overall().ttft_p99)
+            n_done += len(res.completed)
+            rho_max = max(rho_max, max(max(p["rho"]) for p in res.poll_log))
+            demotions += sum(kv.demotions for kv in sim.kvbm)
+            onboarded += sum(1 for r in res.completed if r.onboard_frac > 0)
+        us = (time.perf_counter() - t0) * 1e6
+        rows[g1] = dict(cost=per_seed, ttft_p99=sum(ttfts) / len(ttfts),
+                        rho_max=rho_max, demotions=demotions,
+                        onboarded=onboarded, n=n_done,
+                        us_per_req=us / max(n_done, 1))
+    # PoA_KV: seed-matched cost ratio against the unbounded-G1 run (the
+    # coordinated social-optimum proxy named in the module docstring)
+    base = rows[UNBOUNDED]["cost"]
+    for g1 in G1_SWEEP:
+        ratios = [c / max(b, 1e-12)
+                  for c, b in zip(rows[g1]["cost"], base)]
+        r = rows[g1]
+        r["poa_kv"] = sum(ratios) / len(ratios)
+        del r["cost"]
+        emit(f"prop5_g1_{g1}", r["us_per_req"],
+             f"rho_max={r['rho_max']:.2f};demotions={r['demotions']};"
+             f"onboarded={r['onboarded']};ttft_p99={r['ttft_p99']:.3f}s;"
+             f"poa_kv={r['poa_kv']:.3f}")
+    save_json("prop5_g1_sweep", rows)
+
+
+if __name__ == "__main__":
+    run()

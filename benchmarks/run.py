@@ -54,9 +54,9 @@ def main() -> None:
 
     from benchmarks import (baselines_static_routing, bench_kernels,
                             bench_router, exp2_saturation_detection,
-                            fig5_poa_curves, table4_equilibrium,
-                            table5_crossmodel, table6_pareto,
-                            table78_adaptive)
+                            fig5_poa_curves, prop5_g1_sweep,
+                            table4_equilibrium, table5_crossmodel,
+                            table6_pareto, table78_adaptive)
 
     registry = {
         "table4": lambda: table4_equilibrium.run(hold),
@@ -65,6 +65,7 @@ def main() -> None:
         "table6": lambda: table6_pareto.run(min(hold, 90.0)),
         "table78": lambda: table78_adaptive.run(iters),
         "fig5": lambda: fig5_poa_curves.run(min(hold, 90.0)),
+        "prop5": lambda: prop5_g1_sweep.run(min(hold, 60.0)),
         "baselines": lambda: baselines_static_routing.run(min(hold, 90.0)),
         "kernels": bench_kernels.run,
         "router": bench_router.run,

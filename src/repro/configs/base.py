@@ -7,7 +7,7 @@ same-family config for CPU smoke tests).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 

@@ -8,13 +8,18 @@ follow Eq. 6 (α_G1 < α_G2 < α_G3 < γ recompute).
 
 ``capacity_ratio`` ρ = active blocks / G1 capacity drives the Prop. 5 regime
 transition (PoA_KV = 1 below ρ=1; contested above).
+
+Blocks backing an in-flight decode are *pinned* (reference-counted): the
+eviction policy never demotes them, so under pin pressure G1 can run over
+capacity — that over-subscription is exactly the ρ > 1 contested regime.
+``on_g1_evict`` fires whenever a block leaves G1 (demotion or free), the
+hook the serving layer uses to keep router overlap claims coherent with
+actual HBM residency.
 """
 from __future__ import annotations
 
-import heapq
-import itertools
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
 
 TIERS = ("G1", "G2", "G3", "G4")
 
@@ -29,43 +34,69 @@ class Block:
     tier: str
     frequency: float = 1.0
     size: int = 1
+    pin_count: int = 0
+    seq: int = 0         # allocation order; chains allocate root→leaf
+    last_touch: float = 0.0   # last allocate/access time (cache-churn age)
 
 
 class KVBlockManager:
     """Per-worker hierarchical cache."""
 
-    def __init__(self, capacity: Dict[str, int], worker_id: int = 0):
+    def __init__(self, capacity: Dict[str, int], worker_id: int = 0,
+                 on_g1_evict: Optional[Callable[[int], None]] = None):
         # G4 effectively unbounded
         self.capacity = {"G1": capacity.get("G1", 1024),
                          "G2": capacity.get("G2", 4096),
                          "G3": capacity.get("G3", 16384),
                          "G4": capacity.get("G4", 1 << 40)}
         self.worker_id = worker_id
+        self.on_g1_evict = on_g1_evict
         self.blocks: Dict[int, Block] = {}
         self.tier_usage = {t: 0 for t in TIERS}
         self.evictions = 0
         self.promotions = 0
         self.demotions = 0
+        self._seq = 0
 
     # ------------------------------------------------------------- admit ----
 
-    def allocate(self, block_id: int) -> str:
+    def allocate(self, block_id: int, now: float = 0.0) -> str:
         """New block: admit to G1, evicting (demoting) as needed."""
         if block_id in self.blocks:
-            return self.access(block_id)
+            return self.access(block_id, now)
         self._make_room("G1")
-        blk = Block(block_id, "G1", frequency=1.0)
+        self._seq += 1
+        blk = Block(block_id, "G1", frequency=1.0, seq=self._seq,
+                    last_touch=now)
         self.blocks[block_id] = blk
         self.tier_usage["G1"] += 1
         return "G1"
 
-    def access(self, block_id: int) -> str:
-        """Cache hit: double frequency; promote if eligible (freq ≥ 2)."""
+    def access(self, block_id: int, now: float = 0.0) -> str:
+        """Cache hit: double frequency; promote if eligible (freq ≥ 2).
+
+        Frequency is floored back to 1 before doubling (§2.2: "frequency
+        starts at 1, doubles on hit") — without the floor a fully-decayed
+        block stays at 0×2=0 forever, permanently ineligible for promotion
+        and the eternal eviction victim."""
         blk = self.blocks.get(block_id)
         if blk is None:
             return "MISS"
-        blk.frequency *= 2.0
+        blk.last_touch = max(blk.last_touch, now)
+        blk.frequency = max(blk.frequency, 1.0) * 2.0
         if blk.tier != "G1" and blk.frequency >= 2.0:
+            self._promote(blk)
+        return blk.tier
+
+    def onboard(self, block_id: int) -> str:
+        """Fetch a resident block into G1 HBM (§8.4 onboarding): promote
+        through the hierarchy until it is G1-resident, making room as
+        needed.  Decode requires HBM residency, so admission onboards
+        every block of the request — a no-op for blocks already in G1."""
+        blk = self.blocks.get(block_id)
+        if blk is None:
+            return "MISS"
+        while blk.tier != "G1":
             self._promote(blk)
         return blk.tier
 
@@ -79,6 +110,22 @@ class KVBlockManager:
         blk = self.blocks.pop(block_id, None)
         if blk is not None:
             self.tier_usage[blk.tier] -= 1
+            if blk.tier == "G1" and self.on_g1_evict is not None:
+                self.on_g1_evict(block_id)
+
+    # ----------------------------------------------------------- pinning ----
+
+    def pin(self, block_id: int):
+        """Reference-count a block backing an in-flight decode: pinned
+        blocks are never demoted out of their tier."""
+        blk = self.blocks.get(block_id)
+        if blk is not None:
+            blk.pin_count += 1
+
+    def unpin(self, block_id: int):
+        blk = self.blocks.get(block_id)
+        if blk is not None and blk.pin_count > 0:
+            blk.pin_count -= 1
 
     # ------------------------------------------------------------ policy ----
 
@@ -88,12 +135,19 @@ class KVBlockManager:
             blk.frequency = max(blk.frequency - 1.0, 0.0)
 
     def _victim(self, tier: str) -> Optional[Block]:
-        cands = [b for b in self.blocks.values() if b.tier == tier]
+        cands = [b for b in self.blocks.values()
+                 if b.tier == tier and b.pin_count == 0]
         if not cands:
             return None
-        return min(cands, key=lambda b: (b.frequency, b.block_id))
+        # Equal-frequency ties evict the deepest (most recently allocated)
+        # block first — radix caches evict leaves, keeping the surviving
+        # prefix contiguous and therefore onboardable.
+        return min(cands, key=lambda b: (b.frequency, -b.seq))
 
     def _make_room(self, tier: str):
+        # When every resident block is pinned there is no victim: the tier
+        # runs over capacity (pinned decode state cannot be dropped) — the
+        # over-subscribed ρ > 1 regime of Prop. 5.
         while self.tier_usage[tier] >= self.capacity[tier]:
             victim = self._victim(tier)
             if victim is None:
@@ -106,6 +160,7 @@ class KVBlockManager:
             self.free(blk.block_id)
             self.evictions += 1
             return
+        src = blk.tier
         nxt = TIERS[idx + 1]
         self._make_room(nxt)
         self.tier_usage[blk.tier] -= 1
@@ -114,6 +169,8 @@ class KVBlockManager:
         self.demotions += 1
         if nxt != "G1":
             self.evictions += 1
+        if src == "G1" and self.on_g1_evict is not None:
+            self.on_g1_evict(blk.block_id)
 
     def _promote(self, blk: Block):
         idx = TIERS.index(blk.tier)

@@ -4,7 +4,6 @@ paper's controller polls (game_poa, game_saturation_state,
 game_router_temperature, game_routing_cost)."""
 from __future__ import annotations
 
-import bisect
 import math
 from collections import deque
 from typing import Deque, Dict, List, Optional, Tuple

@@ -17,7 +17,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Tuple
 
-import numpy as np
 
 
 def variational_equilibrium(v_ttft: Callable[[float], float],

@@ -9,7 +9,7 @@ Dynamo's global radix tree.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 BLOCK_SIZE = 16  # tokens per KV block (vLLM/Dynamo default granularity)
 
@@ -46,6 +46,11 @@ class KvIndexer:
         self.ttl = ttl
         self.root = _Node()
         self._worker_blocks: Dict[int, Set[Tuple[int, ...]]] = {}
+        # Chained hashes are prefix-unique (hash_i commits to the whole
+        # prefix), so each hash identifies exactly one tree node/path —
+        # the lookup tables single-block invalidation needs.
+        self._node_by_hash: Dict[int, _Node] = {}
+        self._path_by_hash: Dict[int, Tuple[int, ...]] = {}
 
     def _fresh(self, node: _Node, worker: int, now: float) -> bool:
         t = node.workers.get(worker)
@@ -64,6 +69,28 @@ class KvIndexer:
             node.workers[worker] = now
             path.append(h)
             self._worker_blocks.setdefault(worker, set()).add(tuple(path))
+            self._node_by_hash[h] = node
+            self._path_by_hash[h] = tuple(path)
+
+    def remove_worker_block(self, worker: int, block_hash: int):
+        """Tier-coherence invalidation: drop ``worker``'s claim on one
+        block (identified by its chained hash, e.g. on a KVBM demotion
+        out of G1).  Because overlap scoring walks from the root and stops
+        at the first unclaimed node, removing a mid-chain claim truncates
+        the credited prefix right before this block."""
+        node = self._node_by_hash.get(block_hash)
+        if node is None:
+            return
+        node.workers.pop(worker, None)
+        wb = self._worker_blocks.get(worker)
+        if wb is not None:
+            # Drop this block's path and every deeper path running through
+            # it — those claims are no longer reachable from the root, so
+            # num_blocks() must not count them.
+            prefix = self._path_by_hash.get(block_hash, ())
+            k = len(prefix)
+            wb.difference_update(
+                {p for p in wb if p[:k] == prefix})
 
     def remove_worker_blocks(self, worker: int, tokens: Sequence[int]):
         """Eviction event: drop this worker from every block of the sequence."""

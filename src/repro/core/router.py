@@ -16,10 +16,10 @@ from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.radix import BLOCK_SIZE, KvIndexer
+from repro.core.radix import KvIndexer
 
 
 @dataclass(frozen=True)
@@ -141,38 +141,67 @@ class KvPushRouter:
 
 
 # ------------------------------------------------------ static baselines ----
+#
+# Every baseline implements the same ``best_worker(tokens,
+# router_config_override=None, now=0.0)`` signature as KvPushRouter, so
+# routing policies are drop-in interchangeable, and all of them skip
+# unhealthy workers (routing to a dead worker is not a baseline, it's a
+# bug).  Built from an int they keep a standalone all-healthy worker
+# table; built from a KvPushRouter they share its table, so
+# ``set_health`` on the router is visible to the baseline.
 
-class RoundRobinRouter:
-    """§9.2 counterfactual baseline."""
 
-    def __init__(self, num_workers: int):
-        self.n = num_workers
+class _BaselineRouter:
+    def __init__(self, workers):
+        if isinstance(workers, KvPushRouter):
+            self._table = workers.workers
+        else:
+            self._table = {i: WorkerState(i) for i in range(int(workers))}
+
+    def _healthy_ids(self) -> List[int]:
+        ids = [w for w, st in self._table.items() if st.healthy]
+        if not ids:
+            raise RuntimeError("no healthy workers")
+        return ids
+
+    def set_health(self, worker_id: int, healthy: bool):
+        self._table[worker_id].healthy = healthy
+
+
+class RoundRobinRouter(_BaselineRouter):
+    """§9.2 counterfactual baseline: cycle over the healthy workers."""
+
+    def __init__(self, workers):
+        super().__init__(workers)
         self._i = 0
 
-    def best_worker(self, tokens, router_config_override=None):
-        w = self._i % self.n
+    def best_worker(self, tokens, router_config_override=None, now=0.0):
+        ids = self._healthy_ids()
+        w = ids[self._i % len(ids)]
         self._i += 1
-        return w, 0.0, [0.0] * self.n
+        return w, 0.0, [0.0] * len(ids)
 
 
-class RandomRouter:
-    def __init__(self, num_workers: int, seed: int = 0):
-        self.n = num_workers
+class RandomRouter(_BaselineRouter):
+    def __init__(self, workers, seed: int = 0):
+        super().__init__(workers)
         self._rng = random.Random(seed)
 
-    def best_worker(self, tokens, router_config_override=None):
-        return self._rng.randrange(self.n), 0.0, [0.0] * self.n
+    def best_worker(self, tokens, router_config_override=None, now=0.0):
+        ids = self._healthy_ids()
+        return ids[self._rng.randrange(len(ids))], 0.0, [0.0] * len(ids)
 
 
-class PowerOfTwoRouter:
+class PowerOfTwoRouter(_BaselineRouter):
     """Pick two random workers, route to the less loaded (§9.2 baseline)."""
 
     def __init__(self, router: KvPushRouter, seed: int = 0):
+        super().__init__(router)
         self.router = router
         self._rng = random.Random(seed)
 
-    def best_worker(self, tokens, router_config_override=None):
-        ids = [w for w, st in self.router.workers.items() if st.healthy]
+    def best_worker(self, tokens, router_config_override=None, now=0.0):
+        ids = self._healthy_ids()
         a, b = self._rng.sample(ids, 2) if len(ids) >= 2 else (ids[0], ids[0])
         # compare capacity-normalized utilization so heterogeneous pools
         # don't starve the small workers (ties break to the first pick)

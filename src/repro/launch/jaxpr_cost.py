@@ -22,12 +22,9 @@ enough to compile both ways (see tests/test_jaxpr_cost.py).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict
 
 import jax
 import numpy as np
-from jax import core
 
 TRANSCENDENTAL = {
     "exp", "log", "log1p", "expm1", "tanh", "logistic", "sin", "cos",

@@ -12,7 +12,6 @@ path (see ``repro.kernels.flash_attention``).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

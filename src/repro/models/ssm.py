@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import runtime_flags as flags
 from repro.models.layers import COMPUTE_DTYPE, _init, rmsnorm, rmsnorm_init

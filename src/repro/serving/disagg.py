@@ -10,13 +10,11 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.controller import AdaptiveRouter, REGIME_PARAMS
-from repro.core.metrics import MetricsRegistry
+from repro.core.controller import AdaptiveRouter
 from repro.core.poa import CompletedRequest, PoATracker
 from repro.core.router import KvPushRouter, KvRouterConfig
 from repro.core.saturation import DetectorConfig, SaturationDetector

@@ -34,7 +34,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 from repro.serving.simulator import (ClusterConfig, DecodeWorkerSpec,
                                      Simulator)
-from repro.serving.workload import ArrivalProcess, WorkloadConfig
+from repro.serving.workload import WorkloadConfig
 
 
 @dataclass(frozen=True)
@@ -253,6 +253,94 @@ def _hetero_burst(rate: float = 6.0, burst_rate: float = 30.0,
         workload=WorkloadConfig.bursty(rate=rate, burst_rate=burst_rate,
                                        duration_s=duration_s,
                                        on_s=6.0, off_s=18.0),
+        sim_kwargs=kw)
+
+
+# Cache pressure (Game 2 / Prop. 5) ------------------------------------------
+#
+# Tiny per-worker G1 HBM against the skewed template mix: resident blocks
+# outgrow G1 mid-run, ρ crosses 1, and the KVBM starts demoting into
+# G2/G3 — the contested regime where router overlap must stay coherent
+# with actual HBM residency and G2/G3 hits pay Eq. 6 onboarding latency
+# instead of full recompute.
+
+def _pressure_cluster(g1_blocks: int, g2_blocks: Optional[int] = None,
+                      g3_blocks: Optional[int] = None,
+                      topo: str = "1P/2D") -> ClusterConfig:
+    base = ClusterConfig.for_model("llama-3.1-70b", topo)
+    return replace(base, g1_blocks=g1_blocks,
+                   g2_blocks=g2_blocks if g2_blocks is not None else 2 * g1_blocks,
+                   g3_blocks=g3_blocks if g3_blocks is not None else 4 * g1_blocks)
+
+
+def _pressure_workload(workload: WorkloadConfig, input_tokens: int,
+                       num_templates: int = 12) -> WorkloadConfig:
+    # longer prompts (more blocks per template) and a wider Zipf-skewed
+    # template universe, so the resident working set outgrows the
+    # shrunken G1 within the run and keeps churning
+    return replace(workload, input_tokens=input_tokens,
+                   num_templates=num_templates)
+
+
+@_reg("cache-pressure-70b",
+      "70B 1P/2D ramp with tiny G1 HBM (Prop. 5: ρ crosses 1 mid-run, "
+      "demotions + G2/G3 onboarding on the TTFT path)")
+def _cache_pressure_ramp(concurrency: int = 48, hold_s: float = 90.0,
+                         g1_blocks: int = 48, input_tokens: int = 256,
+                         fast: bool = False, **kw) -> Scenario:
+    if fast:
+        hold_s = 20.0
+    return Scenario(
+        name="", description="",
+        cluster=_pressure_cluster(g1_blocks),
+        workload=_pressure_workload(
+            WorkloadConfig.single_level(concurrency, hold_s=hold_s,
+                                        ramp_s=5.0 if fast else 30.0),
+            input_tokens),
+        sim_kwargs=kw)
+
+
+@_reg("cache-pressure-burst",
+      "tiny-G1 cluster under bursty open-loop arrivals — tier churn plus "
+      "the overload drain tail")
+def _cache_pressure_burst(rate: float = 5.0, burst_rate: float = 25.0,
+                          duration_s: float = 120.0, g1_blocks: int = 48,
+                          input_tokens: int = 256, fast: bool = False,
+                          **kw) -> Scenario:
+    if fast:
+        duration_s = 25.0
+    return Scenario(
+        name="", description="",
+        cluster=_pressure_cluster(g1_blocks),
+        workload=_pressure_workload(
+            WorkloadConfig.bursty(rate=rate, burst_rate=burst_rate,
+                                  duration_s=duration_s, on_s=6.0,
+                                  off_s=14.0),
+            input_tokens),
+        sim_kwargs=kw)
+
+
+@_reg("cache-pressure-hetero",
+      "mixed-generation pool where only the small cards are G1-starved — "
+      "per-worker ρ diverges and cache-affinity must follow residency")
+def _cache_pressure_hetero(concurrency: int = 64, hold_s: float = 90.0,
+                           input_tokens: int = 256, fast: bool = False,
+                           **kw) -> Scenario:
+    if fast:
+        hold_s = 20.0
+    big = DecodeWorkerSpec(decode_cap=56, g1_blocks=100_000,
+                           itl_base=0.0090, kv_transfer=0.012)
+    small = DecodeWorkerSpec(decode_cap=24, g1_blocks=32, g2_blocks=64,
+                             g3_blocks=128, itl_base=0.0135,
+                             itl_slope=0.00001, kv_transfer=0.020)
+    base = ClusterConfig.for_model("llama-3.1-70b", "1P/3D")
+    return Scenario(
+        name="", description="",
+        cluster=replace(base, decode_workers=(big, small, small)),
+        workload=_pressure_workload(
+            WorkloadConfig.single_level(concurrency, hold_s=hold_s,
+                                        ramp_s=5.0 if fast else 30.0),
+            input_tokens),
         sim_kwargs=kw)
 
 

@@ -37,8 +37,8 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -49,7 +49,7 @@ from repro.core.poa import CompletedRequest, PoATracker
 from repro.core.radix import block_hashes
 from repro.core.router import (KvPushRouter, KvRouterConfig, PowerOfTwoRouter,
                                RandomRouter, RoundRobinRouter)
-from repro.core.saturation import DetectorConfig, Regime, SaturationDetector
+from repro.core.saturation import DetectorConfig, SaturationDetector
 from repro.serving.workload import WorkloadConfig, template_tokens
 
 TEMPLATE_POPULARITY = (0.35, 0.25, 0.20, 0.12, 0.08)
@@ -61,10 +61,15 @@ class DecodeWorkerSpec:
 
     A mixed-generation GPU pool is expressed as a tuple of these: newer
     cards get a larger ``decode_cap``/``g1_blocks`` and smaller
-    ``itl_base``; remote nodes get a larger ``kv_transfer``.
+    ``itl_base``; remote nodes get a larger ``kv_transfer``.  The
+    ``g2_blocks``/``g3_blocks`` tiers back the hierarchical KVBM (Def. 2):
+    blocks demoted out of G1 HBM land in CPU DRAM then local SSD, from
+    which they can be onboarded instead of recomputed (§8.4).
     """
     decode_cap: int = 60              # admission slots (transfer/batch)
     g1_blocks: int = 100_000          # HBM KV-block capacity
+    g2_blocks: int = 400_000          # CPU-DRAM KV-block capacity
+    g3_blocks: int = 1_600_000        # local-SSD KV-block capacity
     itl_base: float = 0.0090          # inter-token latency at low load (s)
     itl_slope: float = 0.000005       # load dependence (bandwidth-bound)
     kv_transfer: float = 0.012        # prefill→decode KV transfer latency (s)
@@ -91,6 +96,15 @@ class ClusterConfig:
     kv_transfer: float = 0.012        # cross-node KV transfer latency (s)
     decode_cap: int = 60              # admission slots per decode worker
     g1_blocks: int = 100_000          # per-decode-worker HBM block capacity
+    g2_blocks: int = 400_000          # per-decode-worker CPU-DRAM blocks
+    g3_blocks: int = 1_600_000        # per-decode-worker local-SSD blocks
+    # Eq. 6 per-block onboarding latencies, α_G1 < α_G2 < α_G3 < α_G4 < γ
+    # (a G1 hit is free; γ ≈ miss_penalty/prefill_rate per input block —
+    # ~1.7 ms for the 70B defaults — bounds the alphas from above so
+    # onboarding is always preferable to redundant recompute).
+    alpha_g2: float = 0.0003          # G2→G1 onboarding per block (s)
+    alpha_g3: float = 0.0012          # G3→G1 onboarding per block (s)
+    alpha_g4: float = 0.0016          # G4→G1 onboarding per block (s)
     service_sigma: float = 0.5        # lognormal service jitter (batching)
     cache_ttl: float = 3.0            # radix-claim freshness (LRU churn model)
     metrics_interval: float = 1.0     # event-plane load-metric staleness (s)
@@ -107,6 +121,7 @@ class ClusterConfig:
             return self.decode_workers
         return tuple(DecodeWorkerSpec(
             decode_cap=self.decode_cap, g1_blocks=self.g1_blocks,
+            g2_blocks=self.g2_blocks, g3_blocks=self.g3_blocks,
             itl_base=self.itl_base, itl_slope=self.itl_slope,
             kv_transfer=self.kv_transfer) for _ in range(self.num_decode))
 
@@ -143,6 +158,10 @@ class SimRequest:
     overlaps_all: Tuple[float, ...] = ()
     loads_at_schedule: Tuple[float, ...] = ()
     phase: int = 0
+    # tier-coherent cache accounting (quoted at scheduling time)
+    hashes: Tuple[int, ...] = ()          # chained KV block hashes
+    onboard_frac: float = 0.0             # blocks onboarded from G2/G3/G4
+    onboard_latency: float = 0.0          # Eq. 6 onboarding TTFT add (s)
 
     @property
     def ttft(self) -> float:
@@ -173,6 +192,17 @@ class Simulator:
         # dedicated stream for open-loop arrival sampling so closed-loop
         # runs stay byte-identical to the pre-scenario simulator
         self.arrival_rng = np.random.default_rng([seed, 0xA221])
+        # Template popularity: the legacy 5-template mix verbatim (identity
+        # path), or a Zipf-skewed extension when the workload asks for a
+        # wider template universe (cache-pressure scenarios grow the
+        # working set past G1 this way).
+        n_templates = workload.num_templates
+        if n_templates == len(TEMPLATE_POPULARITY):
+            self.template_probs = TEMPLATE_POPULARITY
+        else:
+            w = [1.0 / (i + 1) ** 0.9 for i in range(n_templates)]
+            tot = sum(w)
+            self.template_probs = tuple(x / tot for x in w)
 
         self.router = KvPushRouter(cluster.num_decode,
                                    router_config or KvRouterConfig(),
@@ -180,10 +210,12 @@ class Simulator:
         self.router.indexer.ttl = cluster.cache_ttl
         for w, spec in enumerate(self.specs):
             self.router.set_capacity(w, float(spec.decode_cap))
+        # Baselines share the router's worker table so health changes
+        # propagate to every policy.
         if routing_policy == "round_robin":
-            self.policy = RoundRobinRouter(cluster.num_decode)
+            self.policy = RoundRobinRouter(self.router)
         elif routing_policy == "random":
-            self.policy = RandomRouter(cluster.num_decode, seed)
+            self.policy = RandomRouter(self.router, seed)
         elif routing_policy == "p2c":
             self.policy = PowerOfTwoRouter(self.router, seed)
         else:
@@ -198,8 +230,18 @@ class Simulator:
         self.poa = PoATracker(num_workers=cluster.num_decode, window_s=30.0,
                               capacities=tuple(float(s.decode_cap)
                                                for s in self.specs))
-        self.kvbm = [KVBlockManager({"G1": spec.g1_blocks}, w)
-                     for w, spec in enumerate(self.specs)]
+        # Tier-coherent hierarchical cache: whenever KVBM demotes (or
+        # frees) a block out of G1 HBM, the router's overlap claim for it
+        # is invalidated, so cache-affinity routing only ever credits
+        # G1-resident prefixes (the NetKV coherence channel).
+        self.kvbm = [
+            KVBlockManager(
+                {"G1": spec.g1_blocks, "G2": spec.g2_blocks,
+                 "G3": spec.g3_blocks},
+                w,
+                on_g1_evict=lambda h, _w=w:
+                    self.router.indexer.remove_worker_block(_w, h))
+            for w, spec in enumerate(self.specs)]
 
         # prefill pool state
         self.prefill_busy = [False] * cluster.num_prefill
@@ -232,7 +274,7 @@ class Simulator:
         target = self.workload.concurrency_at(self.now)
         while self.in_flight < target:
             template = int(self.rng.choice(
-                len(TEMPLATE_POPULARITY), p=TEMPLATE_POPULARITY))
+                len(self.template_probs), p=self.template_probs))
             self._submit(template, self.workload.input_tokens,
                          self.workload.output_tokens)
 
@@ -242,7 +284,7 @@ class Simulator:
         template = entry.template
         if template < 0:  # open-loop: sample from the popularity skew
             template = int(self.rng.choice(
-                len(TEMPLATE_POPULARITY), p=TEMPLATE_POPULARITY))
+                len(self.template_probs), p=self.template_probs))
         self._submit(template, entry.input_tokens, entry.output_tokens)
 
     def _submit(self, template: int, input_tokens: int, output_tokens: int):
@@ -261,11 +303,9 @@ class Simulator:
     def _route(self, req: SimRequest):
         """Decode-worker selection at arrival (Game 3 mechanism)."""
         cfg = self._active_router_config()
-        if self.policy is self.router:
-            worker, overlap, overlaps = self.router.best_worker(
-                req.tokens, router_config_override=cfg, now=self.now)
-        else:
-            worker, overlap, overlaps = self.policy.best_worker(req.tokens)
+        worker, overlap, overlaps = self.policy.best_worker(
+            req.tokens, router_config_override=cfg, now=self.now)
+        if self.policy is not self.router:
             overlaps = self.router.indexer.overlap_scores(
                 req.tokens, list(range(self.cluster.num_decode)), self.now)
             overlap = overlaps[worker]
@@ -274,8 +314,48 @@ class Simulator:
         req.overlaps_all = tuple(overlaps)
         req.loads_at_schedule = tuple(
             self._committed_load(w) for w in range(self.cluster.num_decode))
+        req.hashes = tuple(block_hashes(req.tokens))
+        fresh = self.router.indexer.matched_blocks(worker, req.tokens,
+                                                   self.now)
+        req.onboard_frac, req.onboard_latency = self._tier_split(
+            worker, req.hashes, fresh)
         self.router.on_schedule(worker, req.tokens, decode_blocks=0.0,
                         now=self.now)
+
+    def _tier_split(self, w: int, hashes: Tuple[int, ...],
+                    fresh_blocks: int) -> Tuple[float, float]:
+        """Split a request's prefix blocks into G1 hits, onboardable
+        lower-tier residents, and true misses (the §8.4 redundant-recompute
+        vs. onboarding tradeoff).
+
+        The first ``fresh_blocks`` blocks are the router-credited fresh G1
+        prefix (coherent with HBM residency by construction).  Beyond it,
+        blocks resident in G2/G3/G4 are onboarded at the per-tier Eq. 6
+        latency instead of recomputed.  A block whose indexer claim went
+        TTL-stale models vLLM-style HBM recycling: it is recomputed (a
+        miss) even if the coarse KVBM still shows it G1-resident — which
+        keeps large-G1 runs on the identity path — but recomputation
+        restores its KV, so the walk continues through it to deeper
+        lower-tier residents.  Lower-tier copies churn on the same
+        ``cache_ttl`` clock (G2/G3 are shared caches, not archives): a
+        demoted block is onboardable only while still fresh — exactly the
+        window in which its G1 copy would have been a free hit — so tier
+        pressure can convert free hits into paid onboards but never
+        misses into hits.  The chain breaks at the first non-resident
+        block: prefill recomputes the entire suffix from a true hole."""
+        kv = self.kvbm[w]
+        alpha = {"G2": self.cluster.alpha_g2, "G3": self.cluster.alpha_g3,
+                 "G4": self.cluster.alpha_g4}
+        onboard, latency = 0, 0.0
+        for h in hashes[fresh_blocks:]:
+            blk = kv.blocks.get(h)
+            if blk is None:
+                break
+            if blk.tier != "G1" and \
+                    self.now - blk.last_touch <= self.cluster.cache_ttl:
+                onboard += 1
+                latency += alpha[blk.tier]
+        return onboard / max(len(hashes), 1), latency
 
     # --------------------------------------------------------- prefill ------
 
@@ -285,9 +365,12 @@ class Simulator:
                 req = self.prefill_queue.pop(0)
                 self.prefill_busy[w] = True
                 req.prefill_start = self.now
-                # cache-warm routing skips recomputation; misses cost extra
-                # prefill work (throughput channel of §8.4).
-                work = 1.0 + self.cluster.miss_penalty * (1.0 - req.overlap)
+                # cache-warm routing skips recomputation; onboardable
+                # G2/G3 blocks are fetched, not recomputed (they pay Eq. 6
+                # latency at admission instead); only true misses cost
+                # extra prefill work (throughput channel of §8.4).
+                miss = max(1.0 - req.overlap - req.onboard_frac, 0.0)
+                work = 1.0 + self.cluster.miss_penalty * miss
                 sg = self.cluster.service_sigma
                 service = (work / self.cluster.prefill_rate) \
                     * float(self.rng.lognormal(-0.5 * sg * sg, sg))
@@ -311,13 +394,20 @@ class Simulator:
     def _admit_decode(self, req: SimRequest):
         w = req.decode_worker
         spec = self.specs[w]
-        transfer = spec.kv_transfer * (1.0 - req.overlap)
+        # onboarding G2/G3 blocks into HBM delays first token by the
+        # per-tier Eq. 6 latency (quoted at scheduling) — cheaper than the
+        # full-recompute path a true miss pays in prefill work.
+        transfer = spec.kv_transfer * (1.0 - req.overlap) \
+            + req.onboard_latency
         req.prefill_end = self.now + transfer
         req.decode_start = req.prefill_end
         self.router.indexer.insert(w, req.tokens, self.now)
-        for h in block_hashes(req.tokens):
-            self.kvbm[w].allocate(h)
-            self.kvbm[w].access(h)
+        kv = self.kvbm[w]
+        for h in req.hashes:
+            kv.allocate(h, self.now)
+            kv.access(h, self.now)
+            kv.pin(h)        # active decode state must never be demoted
+            kv.onboard(h)    # decode needs HBM residency: pull into G1
         self.decode_running[w] += 1
         self.peak_decode_running[w] = max(self.peak_decode_running[w],
                                           self.decode_running[w])
@@ -331,6 +421,10 @@ class Simulator:
         req.finish_t = self.now
         w = req.decode_worker
         self.decode_running[w] -= 1
+        # Release the decode pins: the blocks stay resident (that is the
+        # prefix-cache value) but become demotion-eligible again.
+        for h in req.hashes:
+            self.kvbm[w].unpin(h)
         self.in_flight -= 1
         self.completed.append(req)
         self.metrics.histogram("ttft", window_s=30.0).observe(req.ttft, self.now)
@@ -372,11 +466,25 @@ class Simulator:
             "decode_load": [self._committed_load(w)
                             for w in range(self.cluster.num_decode)],
             "concurrency": self.workload.concurrency_at(self.now),
+            # Game 2 observables: Prop. 5's ρ per worker, tier residency,
+            # and the demotion/promotion churn counters.
+            "rho": [kv.capacity_ratio() for kv in self.kvbm],
+            "tiers": [kv.tier_distribution() for kv in self.kvbm],
+            "demotions": [kv.demotions for kv in self.kvbm],
+            "promotions": [kv.promotions for kv in self.kvbm],
         })
         for kv in self.kvbm:
             kv.decay()
-        if self.now + self.detector.config.poll_interval <= self.workload.total_duration():
-            self._push(self.now + self.detector.config.poll_interval, "poll")
+        nxt = self.now + self.detector.config.poll_interval
+        if nxt <= self.workload.total_duration():
+            self._push(nxt, "poll")
+        elif self.workload.mode != "closed" and self.in_flight > 0:
+            # Open-loop/trace arrivals do not wait for completions, so the
+            # run drains far past the arrival horizon; keep sampling the
+            # detector/PoA/ρ while work is in flight — the overload tail
+            # is the regime these modes exist to study.  (Closed-loop
+            # keeps the legacy horizon so its outputs stay bit-exact.)
+            self._push(nxt, "poll")
 
     # ------------------------------------------------------------- run ------
 
@@ -388,9 +496,10 @@ class Simulator:
             # b_active counts blocks ON the worker; queued NIXL transfers are
             # invisible to the router (incomplete-information pathology).
             self.router.workers[w].active_blocks = self.decode_running[w]
-        if self.now + self.cluster.metrics_interval <= \
-                self.workload.total_duration() + 30.0:
-            self._push(self.now + self.cluster.metrics_interval, "sync")
+        nxt = self.now + self.cluster.metrics_interval
+        if nxt <= self.workload.total_duration() + 30.0 or (
+                self.workload.mode != "closed" and self.in_flight > 0):
+            self._push(nxt, "sync")
 
     def run(self) -> "SimResult":
         total = self.workload.total_duration()

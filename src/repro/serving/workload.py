@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import json
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -47,7 +47,7 @@ OUTPUT_TOKENS = 256
 
 def template_tokens(template_id: int, n_tokens: int = INPUT_TOKENS) -> List[int]:
     """Deterministic token ids per template (shared prefixes per template)."""
-    base = (template_id % NUM_TEMPLATES) * 100_000
+    base = template_id * 100_000
     return [base + i for i in range(n_tokens)]
 
 

@@ -13,7 +13,6 @@ Baseline policy (recorded in EXPERIMENTS.md and iterated in §Perf):
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

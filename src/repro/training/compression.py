@@ -9,7 +9,7 @@ residual locally and re-adds it next step, preserving convergence
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,9 +8,8 @@ restart-safe (the stream is a pure function of the step) and elastic-safe
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional
+from typing import Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,8 +1,6 @@
 """int8 gradient compression with error feedback."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.training import compression as C
 

@@ -1,6 +1,5 @@
 """Adaptive controller: Table 2 regime→(τ,ω) mapping, Algorithm 1 metrics,
 dual-frontend zero-downtime switch."""
-import pytest
 
 from repro.core.controller import (AdaptiveRouter, DualFrontend, REGIME_PARAMS)
 from repro.core.router import KvPushRouter, KvRouterConfig

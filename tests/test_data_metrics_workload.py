@@ -1,9 +1,8 @@
 """Data pipeline determinism, metrics registry, workload phases."""
 import numpy as np
-import pytest
 
 from repro.core.metrics import MetricsRegistry
-from repro.serving.workload import Phase, WorkloadConfig, template_tokens
+from repro.serving.workload import WorkloadConfig, template_tokens
 from repro.training.data import DataConfig, make_batch
 
 

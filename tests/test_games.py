@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core.games import CacheGame, RoutingGame, singular_game
-from repro.core.latency import LatencyParams, latency, latency_second_derivative
+from repro.core.latency import LatencyParams, latency_second_derivative
 
 
 def test_rosenthal_potential_tracks_best_response():

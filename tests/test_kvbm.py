@@ -34,13 +34,24 @@ def test_promotion_on_hit():
     kv.allocate(2)          # 1 demoted to G2
     assert kv.blocks[1].tier == "G2"
     kv.decay()              # freq: 1→0, 2→0
-    kv.access(1)            # 0→... doubled stays 0? init handling: 0*2=0 <2
-    assert kv.blocks[1].tier == "G2"
-    kv.access(1)
-    kv.blocks[1].frequency = 4.0
-    kv.access(1)            # freq ≥2 → promote (evicting block 2 from G1)
+    kv.access(1)            # floored to 1, doubled to 2 → promote
     assert kv.blocks[1].tier == "G1"
-    assert kv.blocks[2].tier == "G2"
+    assert kv.blocks[2].tier == "G2"   # evicted from G1 to make room
+
+
+def test_rehit_block_regains_promotion_eligibility():
+    """Regression (§2.2): decay floors frequency at 0 and access used to
+    double it — 0×2=0, so a fully-decayed block could never regain
+    promotion eligibility and stayed the eternal eviction victim."""
+    kv = KVBlockManager({"G1": 8})
+    kv.allocate(1)
+    for _ in range(3):
+        kv.decay()
+    assert kv.blocks[1].frequency == 0.0
+    kv.access(1)
+    assert kv.blocks[1].frequency == 2.0   # 1 (floor) × 2, not 0 × 2
+    kv.access(1)
+    assert kv.blocks[1].frequency == 4.0   # normal doubling resumes
 
 
 def test_capacity_cascade_to_lower_tiers():
@@ -68,6 +79,71 @@ def test_capacity_ratio_rho():
     for b in range(6):
         kv.allocate(b)
     assert kv.capacity_ratio() == 6 / 4  # ρ > 1 ⇒ contested regime (Prop. 5)
+
+
+def test_pinned_block_never_demoted():
+    kv = KVBlockManager({"G1": 1, "G2": 4})
+    kv.allocate(1)
+    kv.pin(1)
+    kv.allocate(2)          # G1 full, but 1 is pinned → no victim
+    assert kv.blocks[1].tier == "G1"
+    # pin pressure over-subscribes G1 (the ρ > 1 contested regime)
+    assert kv.tier_usage["G1"] == 2
+    assert kv.demotions == 0
+    kv.unpin(1)
+    kv.allocate(3)          # room must be made now: unpinned blocks demote
+    assert kv.blocks[3].tier == "G1"
+    assert kv.demotions > 0
+    assert kv.tier_usage["G1"] <= kv.capacity["G1"] + 1
+
+
+def test_pin_refcount_demotion_refusal():
+    """Two pins → one unpin must still refuse demotion."""
+    kv = KVBlockManager({"G1": 1, "G2": 4})
+    kv.allocate(1)
+    kv.pin(1)
+    kv.pin(1)
+    kv.unpin(1)
+    kv.allocate(2)
+    assert kv.blocks[1].tier == "G1"   # still pinned once
+    kv.unpin(1)
+    kv.allocate(3)
+    assert kv.blocks[1].tier != "G1"   # refcount hit 0 → demotable
+
+
+def test_on_g1_evict_callback_fires_on_demotion_and_free():
+    evicted = []
+    kv = KVBlockManager({"G1": 1, "G2": 4}, on_g1_evict=evicted.append)
+    kv.allocate(1)
+    kv.allocate(2)           # demotes 1 out of G1
+    assert evicted == [1]
+    kv.free(2)               # freeing a G1-resident block also fires
+    assert evicted == [1, 2]
+    kv.free(1)               # block 1 is in G2 now: no callback
+    assert evicted == [1, 2]
+
+
+def test_onboard_promotes_to_g1_through_tiers():
+    kv = KVBlockManager({"G1": 1, "G2": 1, "G3": 1})
+    for b in range(4):
+        kv.allocate(b)
+    deep = next(b for b, blk in kv.blocks.items() if blk.tier in ("G3", "G4"))
+    assert kv.onboard(deep) == "G1"
+    assert kv.blocks[deep].tier == "G1"
+    assert kv.onboard(999) == "MISS"
+
+
+def test_victim_tie_break_evicts_deepest_first():
+    """Equal-frequency ties evict the most recently allocated block
+    (radix leaf), keeping the surviving prefix contiguous."""
+    kv = KVBlockManager({"G1": 3, "G2": 8})
+    kv.allocate(10)
+    kv.allocate(11)
+    kv.allocate(12)          # chain root→leaf: 10, 11, 12
+    kv.allocate(13)          # G1 full → leaf 12 demotes, not root 10
+    assert kv.blocks[12].tier == "G2"
+    assert kv.blocks[10].tier == "G1"
+    assert kv.blocks[11].tier == "G1"
 
 
 def test_tier_usage_invariant():

@@ -1,6 +1,5 @@
 """Game 1 (P/D allocation): variational equilibrium (Prop. 1) and the
 Planner's ±1 best-response dynamic with inertia."""
-import pytest
 
 from repro.core.planner import (Planner, PlannerConfig, social_optimum,
                                 variational_equilibrium)

@@ -56,6 +56,34 @@ def test_eviction_removes_worker_claim():
     assert ix.overlap_scores(toks(0, 64), [0, 1]) == [0.0, 1.0]
 
 
+def test_remove_worker_block_truncates_credited_prefix():
+    """Single-block invalidation (the KVBM demotion hook): dropping a
+    mid-chain claim truncates the fresh prefix right before that block."""
+    ix = KvIndexer()
+    ix.insert(0, toks(0, 64))                    # 4 blocks
+    hs = block_hashes(toks(0, 64))
+    ix.remove_worker_block(0, hs[2])
+    assert ix.matched_blocks(0, toks(0, 64)) == 2
+    assert ix.overlap_scores(toks(0, 64), [0]) == [0.5]
+    # other workers' claims on the same block are untouched
+    ix.insert(1, toks(0, 64))
+    ix.remove_worker_block(0, hs[0])
+    assert ix.overlap_scores(toks(0, 64), [0, 1]) == [0.0, 1.0]
+    # unknown hash is a no-op
+    ix.remove_worker_block(1, 0xDEAD)
+    assert ix.overlap_scores(toks(0, 64), [1]) == [1.0]
+
+
+def test_remove_worker_block_then_reinsert_restores_credit():
+    ix = KvIndexer()
+    ix.insert(0, toks(0, 64))
+    hs = block_hashes(toks(0, 64))
+    ix.remove_worker_block(0, hs[0])
+    assert ix.matched_blocks(0, toks(0, 64)) == 0
+    ix.insert(0, toks(0, 64))                    # re-onboarded / re-admitted
+    assert ix.matched_blocks(0, toks(0, 64)) == 4
+
+
 def test_clear_worker():
     ix = KvIndexer()
     ix.insert(0, toks(0, 64))

@@ -1,9 +1,7 @@
 """Smart Router semantics (Eq. 1/2) + static baselines."""
 import collections
 
-import pytest
 
-from repro.core.radix import KvIndexer
 from repro.core.router import (KvPushRouter, KvRouterConfig, PowerOfTwoRouter,
                                RandomRouter, RoundRobinRouter)
 
@@ -77,6 +75,36 @@ def test_router_config_override_per_request():
 def test_round_robin_cycles():
     rr = RoundRobinRouter(3)
     assert [rr.best_worker(TOKENS_A)[0] for _ in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_baselines_respect_worker_health():
+    """RoundRobin/Random must skip unhealthy workers like every other
+    policy (they share the KvPushRouter's worker table when built
+    from one)."""
+    r = KvPushRouter(3)
+    rr = RoundRobinRouter(r)
+    rnd = RandomRouter(r, seed=1)
+    r.set_health(1, False)
+    assert [rr.best_worker(TOKENS_A)[0] for _ in range(4)] == [0, 2, 0, 2]
+    assert 1 not in {rnd.best_worker(TOKENS_A)[0] for _ in range(50)}
+    # standalone baselines manage their own health table
+    solo = RoundRobinRouter(3)
+    solo.set_health(0, False)
+    assert [solo.best_worker(TOKENS_A)[0] for _ in range(4)] == [1, 2, 1, 2]
+
+
+def test_baselines_share_unified_signature():
+    """Every policy accepts best_worker(tokens, router_config_override,
+    now) so routing policies are drop-in interchangeable."""
+    r = KvPushRouter(2)
+    cfg = KvRouterConfig(overlap_weight=0.0)
+    for policy in (r, RoundRobinRouter(r), RandomRouter(r, seed=0),
+                   PowerOfTwoRouter(r, seed=0)):
+        w, ov, overlaps = policy.best_worker(
+            TOKENS_A, router_config_override=cfg, now=1.5)
+        assert w in (0, 1)
+        assert 0.0 <= ov <= 1.0
+        assert len(overlaps) == 2
 
 
 def test_power_of_two_prefers_less_loaded():

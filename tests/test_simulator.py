@@ -2,7 +2,6 @@
 import numpy as np
 import pytest
 
-from repro.core.router import KvRouterConfig
 from repro.serving.simulator import ClusterConfig, Simulator
 from repro.serving.workload import WorkloadConfig
 
