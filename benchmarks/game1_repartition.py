@@ -1,0 +1,114 @@
+"""Game 1 (Prop. 1 / Eq. 5): runtime P/D repartitioning on the unified
+worker-role pool.
+
+Two experiments on the ``elastic-*`` scenario family:
+
+* **Stationary convergence** — start the pool decode-heavy (1P/5D) under a
+  stationary closed-loop load and let the Planner's ±1 best-response
+  dynamic repartition it.  Reported per scenario: the realized-split
+  trajectory, the variational equilibrium G_P* of the profiled response
+  curves, the fraction of post-warmup polls with |G_P − G_P*| ≤ 1 (the
+  Prop. 1 convergence claim), and the resource-game PoA-hat alongside the
+  routing PoA-hat (Eq. 12).
+
+* **Diurnal re-splitting** — the same pool under a sinusoidal open-loop
+  wave: the equilibrium shifts with the arrival rate and the Planner keeps
+  re-splitting across the cycle (role flips, distinct splits visited).
+
+CSV: ``derived`` carries flips, the split trajectory endpoints, the
+within-±1 fraction, and both PoA-hats.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, save_json
+
+STATIONARY = ("elastic-70b", "elastic-340b")
+DIURNAL = "elastic-burst"
+
+
+def _trajectory(res):
+    """(t, gp, ve_gp, poa_resource, poa_routing) per resource-game poll."""
+    out = []
+    for p in res.poll_log:
+        rg = p.get("resource_game")
+        if rg is None:
+            continue
+        out.append(dict(t=p["t"], gp=rg["gp"], ve_gp=rg["ve_gp"],
+                        so_gp=rg["so_gp"], poa_resource=rg["poa_resource"],
+                        poa_routing=p["poa"], roles=p["roles"]))
+    return out
+
+
+def _converged_frac(traj, warmup_frac: float = 0.5) -> float:
+    tail = traj[int(len(traj) * warmup_frac):]
+    if not tail:
+        return float("nan")
+    return sum(1 for e in tail if abs(e["gp"] - e["ve_gp"]) <= 1) / len(tail)
+
+
+def run(hold: float = 150.0, seeds=(0, 1, 2), smoke: bool = False) -> None:
+    from repro.serving.scenarios import build_simulator
+
+    if smoke:
+        hold, seeds = 60.0, (0,)
+    rows = {}
+    fast = hold <= 60.0
+
+    for name in STATIONARY:
+        t0 = time.perf_counter()
+        trajs, flips, conv, poa_r, poa_routing, n_done = [], 0, [], [], [], 0
+        for seed in seeds:
+            sim = build_simulator(name, seed=seed, fast=fast,
+                                  **({} if fast else {"hold_s": hold}))
+            res = sim.run()
+            traj = _trajectory(res)
+            trajs.append(traj)
+            flips += len(res.role_flips)
+            conv.append(_converged_frac(traj))
+            tail = traj[len(traj) // 2:]
+            poa_r += [e["poa_resource"] for e in tail]
+            poa_routing += [e["poa_routing"] for e in tail
+                            if e["poa_routing"] == e["poa_routing"]]
+            n_done += len(res.completed)
+        us = (time.perf_counter() - t0) * 1e6
+        ve = trajs[0][-1]["ve_gp"] if trajs[0] else -1
+        conv = [c for c in conv if c == c]   # a seed with no planner polls
+        conv_frac = sum(conv) / len(conv) if conv else float("nan")
+        mean = lambda xs: sum(xs) / len(xs) if xs else float("nan")
+        rows[name] = dict(
+            flips=flips, ve_gp=ve, converged_frac=conv_frac,
+            poa_resource=mean(poa_r), poa_routing=mean(poa_routing),
+            n=n_done, us_per_req=us / max(n_done, 1),
+            trajectory=[(e["t"], e["gp"], e["ve_gp"]) for e in trajs[0]])
+        emit(f"game1_{name}", rows[name]["us_per_req"],
+             f"flips={flips};ve_gp={ve};within1={conv_frac:.2f};"
+             f"poa_resource={mean(poa_r):.2f};"
+             f"poa_routing={mean(poa_routing):.2f}")
+
+    # diurnal: the equilibrium moves with the wave; count re-splits
+    t0 = time.perf_counter()
+    flips, splits, n_done = 0, set(), 0
+    poa_r = []
+    for seed in seeds:
+        sim = build_simulator(DIURNAL, seed=seed, fast=fast)
+        res = sim.run()
+        flips += len(res.role_flips)
+        for p in res.poll_log:
+            splits.add(tuple(p["split"]))
+        poa_r += [e["poa_resource"] for e in _trajectory(res)]
+        n_done += len(res.completed)
+    us = (time.perf_counter() - t0) * 1e6
+    mean = lambda xs: sum(xs) / len(xs) if xs else float("nan")
+    rows[DIURNAL] = dict(flips=flips, splits_visited=sorted(splits),
+                         poa_resource=mean(poa_r), n=n_done,
+                         us_per_req=us / max(n_done, 1))
+    emit(f"game1_{DIURNAL}", rows[DIURNAL]["us_per_req"],
+         f"flips={flips};splits={len(splits)};"
+         f"poa_resource={mean(poa_r):.2f}")
+    save_json("game1_repartition", rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -39,6 +39,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="shorter holds / fewer iterations")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny horizons + single seed: CI bit-rot guard "
+                         "for the benchmark scripts, not a measurement")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
     ap.add_argument("--list-scenarios", action="store_true",
@@ -51,13 +54,17 @@ def main() -> None:
         return
     hold = 60.0 if args.fast else 120.0
     iters = 2 if args.fast else 3
+    if args.smoke:
+        hold, iters = 12.0, 1
 
     from benchmarks import (baselines_static_routing, bench_kernels,
                             bench_router, exp2_saturation_detection,
-                            fig5_poa_curves, prop5_g1_sweep,
-                            table4_equilibrium, table5_crossmodel,
-                            table6_pareto, table78_adaptive)
+                            fig5_poa_curves, game1_repartition,
+                            prop5_g1_sweep, table4_equilibrium,
+                            table5_crossmodel, table6_pareto,
+                            table78_adaptive)
 
+    smoke = args.smoke
     registry = {
         "table4": lambda: table4_equilibrium.run(hold),
         "table5": lambda: table5_crossmodel.run(hold),
@@ -65,7 +72,10 @@ def main() -> None:
         "table6": lambda: table6_pareto.run(min(hold, 90.0)),
         "table78": lambda: table78_adaptive.run(iters),
         "fig5": lambda: fig5_poa_curves.run(min(hold, 90.0)),
-        "prop5": lambda: prop5_g1_sweep.run(min(hold, 60.0)),
+        "prop5": lambda: (prop5_g1_sweep.run(8.0, seeds=(0,), concurrency=48)
+                          if smoke else prop5_g1_sweep.run(min(hold, 60.0))),
+        "game1": lambda: game1_repartition.run(hold=min(hold, 150.0),
+                                               smoke=smoke),
         "baselines": lambda: baselines_static_routing.run(min(hold, 90.0)),
         "kernels": bench_kernels.run,
         "router": bench_router.run,

@@ -32,6 +32,15 @@ REGIME_PARAMS: Dict[Regime, KvRouterConfig] = {
 }
 
 
+def violation_rates(metrics: MetricsRegistry, ttft_slo: float, itl_slo: float,
+                    now: float) -> Tuple[float, float]:
+    """Polled TTFT/ITL SLO-violation rates from the registry's windowed
+    histograms — the Game 1 control-plane signal the Planner reads every
+    adjust interval (the paper's per-pool objective V_TTFT / V_ITL)."""
+    return (metrics.histogram("ttft", window_s=30.0).frac_above(ttft_slo, now),
+            metrics.histogram("itl", window_s=30.0).frac_above(itl_slo, now))
+
+
 @dataclass
 class AdaptiveRouter:
     """Algorithm 1: regime-gated per-request parameter override."""

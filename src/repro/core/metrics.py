@@ -65,6 +65,14 @@ class Histogram:
     def count(self, now: Optional[float] = None) -> int:
         return len(self.values(now))
 
+    def frac_above(self, threshold: float, now: Optional[float] = None) -> float:
+        """Fraction of windowed observations above ``threshold`` — the SLO
+        violation rate the Game 1 Planner polls (0.0 on an empty window)."""
+        vs = self.values(now)
+        if not vs:
+            return 0.0
+        return sum(1 for v in vs if v > threshold) / len(vs)
+
 
 class MetricsRegistry:
     """Named registry; ``export_text()`` emits Prometheus exposition format."""

@@ -20,6 +20,7 @@ from typing import Deque, List, Optional, Sequence
 import numpy as np
 
 from repro.core.latency import POA_FROZEN, POA_CACHE_WEIGHT, LatencyParams
+from repro.core.planner import social_optimum, variational_equilibrium
 
 
 def hungarian(cost: np.ndarray) -> np.ndarray:
@@ -158,10 +159,14 @@ class PoATracker:
         else:
             # heterogeneous: the counterfactual balanced load of worker j is
             # capacity-proportional, n̄_j = |W|·C_j/ΣC, and its column count
-            # scales with its share of the replication budget
+            # scales with its share of the replication budget.  A worker with
+            # zero capacity (a pool slot currently serving prefill under the
+            # Game 1 Planner) contributes no columns at all: the routing
+            # counterfactual may only redistribute over live decode workers.
             base_w = np.asarray([float(latency(np.asarray(n * s), self.params))
                                  for s in shares])
-            reps = np.maximum(1, np.round(shares * w * cap)).astype(np.int64)
+            reps = np.round(shares * w * cap).astype(np.int64)
+            reps[shares > 0] = np.maximum(1, reps[shares > 0])
         cols = int(reps.sum())
         cost = np.zeros((n, cols))
         for i, rq in enumerate(reqs):
@@ -182,6 +187,32 @@ class PoATracker:
         if now is not None:
             reqs = [r for r in reqs if r.finish_time >= now - self.window_s]
         return len(reqs)
+
+    def resource_game(self, model, prefill_workers: int, total: int) -> dict:
+        """Game 1 counterfactual (Section 9.2): the realized P/D split
+        against the Prop. 1 variational equilibrium and Remark 1 social
+        optimum of the profiled response curves.
+
+        ``model`` is a :class:`repro.core.planner.ResponseModel` (or any
+        object exposing ``v_ttft(gp)`` / ``v_itl(gd)``).  The resource-game
+        PoA-hat is the social cost V_TTFT(G_P) + V_ITL(G−G_P) at the
+        realized split divided by the cost at the social optimum — 1.0 when
+        the Planner's best-response dynamic has landed on the coordinated
+        split, rising when selfish pool objectives leave workers
+        mis-assigned."""
+        ve = variational_equilibrium(model.v_ttft, model.v_itl, total)
+        so = social_optimum(model.v_ttft, lambda gd, gp: model.v_itl(gd),
+                            total)
+        cost = lambda gp: model.v_ttft(gp) + model.v_itl(total - gp)
+        c_re, c_so = cost(prefill_workers), cost(so)
+        # Additive floor at the Planner's dead-band scale: when the whole
+        # curve is sub-violation-rate noise (an idle diurnal trough), the
+        # raw ratio of two negligible costs would explode while nothing is
+        # actually mis-allocated — smoothed, it reads ≈ 1.
+        floor = 1e-4
+        poa = (c_re + floor) / (c_so + floor)
+        return {"gp": prefill_workers, "gd": total - prefill_workers,
+                "ve_gp": ve, "so_gp": so, "poa_resource": poa}
 
     def current_poa(self, now: Optional[float] = None) -> float:
         reqs = list(self._window)

@@ -77,7 +77,7 @@ class KvPushRouter:
               ) -> Tuple[List[int], List[float], List[float]]:
         """Returns (worker_ids, costs c_j, overlap fractions o_j)."""
         cfg = config or self.config
-        ids = [w for w, st in self.workers.items() if st.healthy]
+        ids = self.healthy_ids()
         overlaps = self.indexer.overlap_scores(tokens, ids, now)
         loads = self._normalized_load(ids)
         costs = []
@@ -119,6 +119,24 @@ class KvPushRouter:
         return ids[j], overlaps[j], overlaps
 
     # --------------------------------------------------------- bookkeeping --
+
+    def healthy_ids(self) -> List[int]:
+        """Worker ids eligible for routing, in the table's stable order —
+        the positional universe of ``costs()``/``best_worker()`` overlaps."""
+        return [w for w, st in self.workers.items() if st.healthy]
+
+    def add_worker(self, worker_id: int, capacity: float = 1.0) -> WorkerState:
+        """(Re-)enlist a worker in the routing table with a clean load view
+        — the Game 1 repartitioning path when a prefill-role worker flips
+        into the decode pool.  Re-enlisting an id that drained out earlier
+        reuses its table slot (keeping positional order stable)."""
+        st = self.workers.get(worker_id)
+        if st is None:
+            st = self.workers[worker_id] = WorkerState(worker_id)
+        st.healthy = True
+        st.active_blocks = 0
+        st.capacity = max(capacity, 1e-9)
+        return st
 
     def on_schedule(self, worker_id: int, tokens: Sequence[int],
                     decode_blocks: float = 1.0, now: float = 0.0):

@@ -32,6 +32,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
+from repro.core.planner import PlannerConfig
 from repro.serving.simulator import (ClusterConfig, DecodeWorkerSpec,
                                      Simulator)
 from repro.serving.workload import WorkloadConfig
@@ -119,7 +120,7 @@ def build_simulator(name: str, seed: int = 0, **overrides) -> Simulator:
     ``routing_policy``, …) are split automatically: anything the factory
     does not consume is forwarded to ``Scenario.build``."""
     sim_keys = {"router_config", "adaptive", "detector_config",
-                "routing_policy", "regime_params"}
+                "routing_policy", "regime_params", "planner_config"}
     sim_kw = {k: overrides.pop(k) for k in list(overrides)
               if k in sim_keys}
     return get_scenario(name, **overrides).build(seed=seed, **sim_kw)
@@ -341,6 +342,103 @@ def _cache_pressure_hetero(concurrency: int = 64, hold_s: float = 90.0,
             WorkloadConfig.single_level(concurrency, hold_s=hold_s,
                                         ramp_s=5.0 if fast else 30.0),
             input_tokens),
+        sim_kwargs=kw)
+
+
+# Elastic worker-role pools (Game 1 / Prop. 1) -------------------------------
+#
+# One unified pool of workers whose P/D split the Planner repartitions at
+# runtime (drain protocol: stop admitting, drain decodes, flush KVBM +
+# indexer claims).  The elastic calibration makes *both* pool objectives
+# load-sensitive — prefill is slowed (long-prompt regime) so the prefill
+# pool can saturate, and decode ITL gets a real load slope so shrinking
+# the decode pool raises ITL violations.  Knobs documented in
+# EXPERIMENTS.md ("Game 1 repartitioning calibration").
+
+def _elastic_cluster(model: str, topo: str, *, prefill_rate: float,
+                     itl_slope: float, decode_cap: int) -> ClusterConfig:
+    base = ClusterConfig.for_model(model, topo)
+    return replace(base, prefill_rate=prefill_rate, itl_slope=itl_slope,
+                   decode_cap=decode_cap)
+
+
+def _elastic_planner(fast: bool, *, itl_slo: float, ttft_slo: float,
+                     adjust_interval: Optional[float] = None,
+                     grace_intervals: Optional[int] = None) -> PlannerConfig:
+    if adjust_interval is None:
+        adjust_interval = 6.0 if fast else 20.0
+    if grace_intervals is None:
+        grace_intervals = 1 if fast else 2
+    return PlannerConfig(adjust_interval=adjust_interval,
+                         grace_intervals=grace_intervals,
+                         ttft_slo=ttft_slo, itl_slo=itl_slo,
+                         hysteresis=0.3)
+
+
+@_reg("elastic-70b",
+      "70B unified 6-worker pool starting decode-heavy (1P/5D); the "
+      "Planner repartitions toward the Prop. 1 variational equilibrium "
+      "under stationary closed-loop load")
+def _elastic_70b(concurrency: int = 64, hold_s: float = 150.0,
+                 topo: str = "1P/5D", fast: bool = False,
+                 planner: bool = True, **kw) -> Scenario:
+    if fast:
+        hold_s = 60.0
+    if planner:
+        kw.setdefault("planner_config",
+                      _elastic_planner(fast, itl_slo=0.016, ttft_slo=0.30))
+    return Scenario(
+        name="", description="",
+        cluster=_elastic_cluster("llama-3.1-70b", topo,
+                                 prefill_rate=16.0, itl_slope=4e-4,
+                                 decode_cap=64),
+        workload=WorkloadConfig.single_level(concurrency, hold_s=hold_s,
+                                             ramp_s=5.0),
+        sim_kwargs=kw)
+
+
+@_reg("elastic-340b",
+      "340B unified 6-worker pool (1P/5D start) under stationary "
+      "closed-loop load with runtime P/D repartitioning")
+def _elastic_340b(concurrency: int = 48, hold_s: float = 150.0,
+                  topo: str = "1P/5D", fast: bool = False,
+                  planner: bool = True, **kw) -> Scenario:
+    if fast:
+        hold_s = 60.0
+    if planner:
+        kw.setdefault("planner_config",
+                      _elastic_planner(fast, itl_slo=0.035, ttft_slo=0.60))
+    return Scenario(
+        name="", description="",
+        cluster=_elastic_cluster("nemotron-4-340b", topo,
+                                 prefill_rate=8.0, itl_slope=8e-4,
+                                 decode_cap=64),
+        workload=WorkloadConfig.single_level(concurrency, hold_s=hold_s,
+                                             ramp_s=5.0),
+        sim_kwargs=kw)
+
+
+@_reg("elastic-burst",
+      "elastic 70B pool under a diurnal open-loop wave: the equilibrium "
+      "split shifts with the arrival rate and the Planner re-splits "
+      "across the cycle")
+def _elastic_burst(rate: float = 10.0, duration_s: float = 240.0,
+                   period_s: float = 120.0, topo: str = "1P/5D",
+                   fast: bool = False, planner: bool = True,
+                   **kw) -> Scenario:
+    if fast:
+        duration_s, period_s = 60.0, 30.0
+    if planner:
+        kw.setdefault("planner_config",
+                      _elastic_planner(fast, itl_slo=0.016, ttft_slo=0.30,
+                                       adjust_interval=5.0 if fast else 10.0))
+    return Scenario(
+        name="", description="",
+        cluster=_elastic_cluster("llama-3.1-70b", topo,
+                                 prefill_rate=16.0, itl_slope=4e-4,
+                                 decode_cap=64),
+        workload=WorkloadConfig.diurnal(rate=rate, duration_s=duration_s,
+                                        period_s=period_s, amplitude=0.8),
         sim_kwargs=kw)
 
 

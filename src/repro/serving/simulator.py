@@ -16,6 +16,18 @@ around an event-driven cluster model with the paper's causal channels:
 * template traffic is mildly skewed (realistic popularity), which is what
   lets cache-affinity herding concentrate load.
 
+The cluster is a **unified worker-role pool**: one list of :class:`Worker`
+objects, each carrying a role (``prefill``/``decode``), its spec, and its
+role-specific state (busy flag vs. admission slots + transfer queue +
+KVBM).  Static clusters fix the roles at construction; passing a
+``planner_config`` closes the Game 1 loop — the Planner joins the event
+loop as a third control-plane event (alongside ``poll``/``sync``) and may
+flip one worker's role per adjust interval via the drain protocol: stop
+admitting, drain running decodes, flush the worker's KVBM and invalidate
+its KvIndexer claims, honor the grace period.  Repartitioning therefore
+pays the paper's real switching costs (a flipped-in decode worker starts
+cache-cold).
+
 The cluster model generalizes along three scenario axes (see
 ``repro.serving.scenarios`` for the named registry): a prefill *pool*
 (``num_prefill`` workers draining one shared queue), a possibly
@@ -37,14 +49,18 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
-from dataclasses import dataclass
-from typing import List, Optional, Tuple
+import re
+from collections import deque
+from dataclasses import dataclass, field, replace
+from typing import Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.controller import REGIME_PARAMS, DualFrontend
+from repro.core.controller import (REGIME_PARAMS, DualFrontend,
+                                   violation_rates)
 from repro.core.kvbm import KVBlockManager
 from repro.core.metrics import MetricsRegistry
+from repro.core.planner import Planner, PlannerConfig, ResponseModel
 from repro.core.poa import CompletedRequest, PoATracker
 from repro.core.radix import block_hashes
 from repro.core.router import (KvPushRouter, KvRouterConfig, PowerOfTwoRouter,
@@ -53,6 +69,11 @@ from repro.core.saturation import DetectorConfig, SaturationDetector
 from repro.serving.workload import WorkloadConfig, template_tokens
 
 TEMPLATE_POPULARITY = (0.35, 0.25, 0.20, 0.12, 0.08)
+
+PREFILL_ROLE = "prefill"
+DECODE_ROLE = "decode"
+
+_TOPOLOGY_RE = re.compile(r"(\d+)\s*[Pp]\s*/\s*(\d+)\s*[Dd]")
 
 
 @dataclass(frozen=True)
@@ -114,22 +135,42 @@ class ClusterConfig:
         if self.decode_workers and self.num_decode != len(self.decode_workers):
             object.__setattr__(self, "num_decode", len(self.decode_workers))
 
+    def default_spec(self) -> DecodeWorkerSpec:
+        """The homogeneous per-worker spec built from the scalar fields —
+        also what a prefill-origin worker carries into the decode pool."""
+        return DecodeWorkerSpec(
+            decode_cap=self.decode_cap, g1_blocks=self.g1_blocks,
+            g2_blocks=self.g2_blocks, g3_blocks=self.g3_blocks,
+            itl_base=self.itl_base, itl_slope=self.itl_slope,
+            kv_transfer=self.kv_transfer)
+
     @property
     def worker_specs(self) -> Tuple[DecodeWorkerSpec, ...]:
         """Resolved per-worker specs (homogeneous scalars expanded)."""
         if self.decode_workers:
             return self.decode_workers
-        return tuple(DecodeWorkerSpec(
-            decode_cap=self.decode_cap, g1_blocks=self.g1_blocks,
-            g2_blocks=self.g2_blocks, g3_blocks=self.g3_blocks,
-            itl_base=self.itl_base, itl_slope=self.itl_slope,
-            kv_transfer=self.kv_transfer) for _ in range(self.num_decode))
+        return tuple(self.default_spec() for _ in range(self.num_decode))
+
+    @classmethod
+    def parse_topology(cls, topology: str) -> Tuple[int, int]:
+        """Parse ``"<n>P/<m>D"`` into (num_prefill, num_decode), rejecting
+        malformed strings (``"1P5D"``, ``"1p/"``, ``"2D/1P"``, …) with a
+        clear error instead of silently mis-parsing them."""
+        m = _TOPOLOGY_RE.fullmatch(topology.strip())
+        if m is None:
+            raise ValueError(
+                f"malformed topology {topology!r}: expected \"<n>P/<m>D\" "
+                f"(prefill workers, a slash, decode workers — e.g. \"1P/2D\")")
+        npf, nd = int(m.group(1)), int(m.group(2))
+        if npf < 1 or nd < 1:
+            raise ValueError(
+                f"topology {topology!r} needs at least one prefill and one "
+                f"decode worker")
+        return npf, nd
 
     @classmethod
     def for_model(cls, name: str, topology: str = "1P/2D") -> "ClusterConfig":
-        np_str, nd_str = topology.split("/")
-        npf = int(np_str.rstrip("Pp"))
-        nd = int(nd_str.rstrip("Dd"))
+        npf, nd = cls.parse_topology(topology)
         if "340b" in name.lower() or "nemotron" in name.lower():
             return cls(name="nemotron-4-340b", num_prefill=npf, num_decode=nd,
                        prefill_rate=19.0, prefill_base=0.030,
@@ -172,6 +213,33 @@ class SimRequest:
         return (self.finish_t - self.decode_start) / max(self.output_tokens, 1)
 
 
+@dataclass
+class Worker:
+    """One GPU slot in the unified pool; ``role`` decides which state is
+    live.
+
+    Prefill-role workers drain the shared prefill queue (``busy``);
+    decode-role workers own admission slots (``running`` vs
+    ``spec.decode_cap``), a ``transfer_queue`` of stalled KV transfers, and
+    a hierarchical ``kvbm``.  The Planner flips roles at runtime through
+    the drain protocol: ``draining`` decode workers stop admitting and
+    finish their running decodes before the flip completes; a busy prefill
+    worker flagged ``pending_role`` flips at its next idle moment."""
+    wid: int
+    role: str
+    spec: DecodeWorkerSpec
+    # prefill-role state
+    busy: bool = False
+    # decode-role state
+    running: int = 0
+    peak_running: int = 0
+    transfer_queue: Deque[SimRequest] = field(default_factory=deque)
+    kvbm: Optional[KVBlockManager] = None
+    # drain protocol
+    draining: bool = False
+    pending_role: Optional[str] = None
+
+
 class Simulator:
     """Event-driven cluster; see module docstring."""
 
@@ -181,10 +249,10 @@ class Simulator:
                  detector_config: Optional[DetectorConfig] = None,
                  routing_policy: str = "kv",       # kv|round_robin|random|p2c
                  seed: int = 0,
-                 regime_params: Optional[dict] = None):
+                 regime_params: Optional[dict] = None,
+                 planner_config: Optional[PlannerConfig] = None):
         self.cluster = cluster
         self.workload = workload
-        self.specs = cluster.worker_specs
         self.now = 0.0
         self._events: List[Tuple[float, int, str, object]] = []
         self._eid = itertools.count()
@@ -204,12 +272,24 @@ class Simulator:
             tot = sum(w)
             self.template_probs = tuple(x / tot for x in w)
 
-        self.router = KvPushRouter(cluster.num_decode,
-                                   router_config or KvRouterConfig(),
+        # ---- unified worker-role pool: decode wids first (0..nd-1, the
+        # legacy router universe), then the prefill pool (nd..nd+np-1).
+        nd, npre = cluster.num_decode, cluster.num_prefill
+        decode_specs = cluster.worker_specs
+        prefill_spec = cluster.default_spec()
+        self.workers: List[Worker] = (
+            [Worker(w, DECODE_ROLE, decode_specs[w]) for w in range(nd)]
+            + [Worker(nd + i, PREFILL_ROLE, prefill_spec)
+               for i in range(npre)])
+        self.decode_ids: List[int] = list(range(nd))
+        self.prefill_ids: List[int] = list(range(nd, nd + npre))
+
+        self.router = KvPushRouter(nd, router_config or KvRouterConfig(),
                                    seed=seed)
         self.router.indexer.ttl = cluster.cache_ttl
-        for w, spec in enumerate(self.specs):
-            self.router.set_capacity(w, float(spec.decode_cap))
+        for wid in self.decode_ids:
+            self.router.set_capacity(
+                wid, float(self.workers[wid].spec.decode_cap))
         # Baselines share the router's worker table so health changes
         # propagate to every policy.
         if routing_policy == "round_robin":
@@ -227,30 +307,47 @@ class Simulator:
         self.dual = DualFrontend()
         self.regime_params = dict(regime_params or REGIME_PARAMS)
         self.metrics = MetricsRegistry()
-        self.poa = PoATracker(num_workers=cluster.num_decode, window_s=30.0,
-                              capacities=tuple(float(s.decode_cap)
-                                               for s in self.specs))
+
+        # ---- Game 1: the Planner as a third control-plane event.  When
+        # enabled, the PoA universe widens to the whole pool (prefill-role
+        # slots carry zero capacity, contributing no counterfactual
+        # columns); when disabled the legacy decode-only universe keeps
+        # every pre-existing scenario bit-exact.
+        self.planner: Optional[Planner] = None
+        self.planner_config: Optional[PlannerConfig] = None
+        if planner_config is not None:
+            self.planner_config = replace(planner_config,
+                                          total_workers=nd + npre)
+            self.planner = Planner(config=self.planner_config,
+                                   prefill_workers=npre, decode_workers=nd)
+            # service-rate telemetry shares the Planner's measurement
+            # window (histograms pin window_s at creation, so create them
+            # here; without a Planner they default to the 30 s telemetry
+            # window on first observation)
+            win = self.planner_config.measure_window
+            self.metrics.histogram("prefill_service", window_s=win)
+            self.metrics.histogram("decode_residency", window_s=win)
+        self.role_flips: List[Tuple[float, int, str]] = []
+        self._arrivals: Deque[float] = deque()
+
+        if self.planner is not None:
+            self._poa_universe = list(range(nd + npre))
+        else:
+            self._poa_universe = list(range(nd))
+        self.poa = PoATracker(num_workers=len(self._poa_universe),
+                              window_s=30.0,
+                              capacities=self._poa_capacities())
+
         # Tier-coherent hierarchical cache: whenever KVBM demotes (or
         # frees) a block out of G1 HBM, the router's overlap claim for it
         # is invalidated, so cache-affinity routing only ever credits
         # G1-resident prefixes (the NetKV coherence channel).
-        self.kvbm = [
-            KVBlockManager(
-                {"G1": spec.g1_blocks, "G2": spec.g2_blocks,
-                 "G3": spec.g3_blocks},
-                w,
-                on_g1_evict=lambda h, _w=w:
-                    self.router.indexer.remove_worker_block(_w, h))
-            for w, spec in enumerate(self.specs)]
+        for wid in self.decode_ids:
+            self.workers[wid].kvbm = self._new_kvbm(self.workers[wid])
 
-        # prefill pool state
-        self.prefill_busy = [False] * cluster.num_prefill
-        self.prefill_queue: List[SimRequest] = []
-        # decode pool state: running + transfer-stalled per worker
-        self.decode_running = [0] * cluster.num_decode
-        self.peak_decode_running = [0] * cluster.num_decode
-        self.transfer_queue: List[List[SimRequest]] = [
-            [] for _ in range(cluster.num_decode)]
+        # shared prefill queue (deque: overload drains pop from the head
+        # tens of thousands of times; list.pop(0) is O(n) per pop)
+        self.prefill_queue: Deque[SimRequest] = deque()
 
         self.in_flight = 0
         self.completed: List[SimRequest] = []
@@ -258,13 +355,64 @@ class Simulator:
         self.poll_log: List[dict] = []
         self.switch_time: Optional[float] = None
 
+    # ------------------------------------------------- pool projections -----
+    #
+    # Legacy views of the worker pool, ordered by the current decode/prefill
+    # membership — what tests, benchmarks and examples indexed before the
+    # unified pool existed.
+
+    @property
+    def specs(self) -> Tuple[DecodeWorkerSpec, ...]:
+        return tuple(self.workers[w].spec for w in self.decode_ids)
+
+    @property
+    def kvbm(self) -> List[KVBlockManager]:
+        return [self.workers[w].kvbm for w in self.decode_ids]
+
+    @property
+    def prefill_busy(self) -> List[bool]:
+        return [self.workers[w].busy for w in self.prefill_ids]
+
+    @property
+    def decode_running(self) -> List[int]:
+        return [self.workers[w].running for w in self.decode_ids]
+
+    @property
+    def peak_decode_running(self) -> List[int]:
+        return [self.workers[w].peak_running for w in self.decode_ids]
+
+    @property
+    def transfer_queue(self) -> List[Deque[SimRequest]]:
+        return [self.workers[w].transfer_queue for w in self.decode_ids]
+
+    def _new_kvbm(self, worker: Worker) -> KVBlockManager:
+        spec = worker.spec
+        return KVBlockManager(
+            {"G1": spec.g1_blocks, "G2": spec.g2_blocks,
+             "G3": spec.g3_blocks},
+            worker.wid,
+            on_g1_evict=lambda h, _w=worker.wid:
+                self.router.indexer.remove_worker_block(_w, h))
+
+    def _poa_capacities(self) -> Tuple[float, ...]:
+        if self.planner is None:
+            return tuple(float(self.workers[w].spec.decode_cap)
+                         for w in self.decode_ids)
+        return tuple(float(w.spec.decode_cap) if w.role == DECODE_ROLE
+                     else 0.0 for w in self.workers)
+
     # ---------------------------------------------------------- events ------
 
     def _push(self, t: float, kind: str, payload=None):
         heapq.heappush(self._events, (t, next(self._eid), kind, payload))
 
-    def _committed_load(self, w: int) -> float:
-        return self.decode_running[w] + len(self.transfer_queue[w])
+    def _committed_load(self, wid: int) -> float:
+        w = self.workers[wid]
+        return w.running + len(w.transfer_queue)
+
+    def _live_decode_ids(self) -> List[int]:
+        return [wid for wid in self.decode_ids
+                if not self.workers[wid].draining]
 
     # ---------------------------------------------------------- client ------
 
@@ -294,11 +442,24 @@ class Simulator:
                          submit_t=self.now,
                          phase=self.workload.phase_of(self.now))
         self.in_flight += 1
+        if self.planner is not None:   # λ telemetry: only the Planner reads
+            self._arrivals.append(self.now)
         self._route(req)
         self.prefill_queue.append(req)
         self._dispatch_prefill()
 
     # ---------------------------------------------------------- routing -----
+
+    def _dense(self, ids: Sequence[int], vals: Sequence[float]
+               ) -> Tuple[float, ...]:
+        """Spread per-live-worker values over the fixed PoA universe
+        (identity on the static path, where the live set IS the universe)."""
+        if list(ids) == self._poa_universe:
+            return tuple(vals)
+        vec = [0.0] * len(self._poa_universe)
+        for wid, v in zip(ids, vals):
+            vec[wid] = v
+        return tuple(vec)
 
     def _route(self, req: SimRequest):
         """Decode-worker selection at arrival (Game 3 mechanism)."""
@@ -306,14 +467,19 @@ class Simulator:
         worker, overlap, overlaps = self.policy.best_worker(
             req.tokens, router_config_override=cfg, now=self.now)
         if self.policy is not self.router:
+            ids = self._live_decode_ids()
             overlaps = self.router.indexer.overlap_scores(
-                req.tokens, list(range(self.cluster.num_decode)), self.now)
-            overlap = overlaps[worker]
+                req.tokens, ids, self.now)
+            overlap = overlaps[ids.index(worker)]
+        else:
+            ids = self.router.healthy_ids()
         req.decode_worker = worker
         req.overlap = overlap
-        req.overlaps_all = tuple(overlaps)
+        req.overlaps_all = self._dense(ids, overlaps)
         req.loads_at_schedule = tuple(
-            self._committed_load(w) for w in range(self.cluster.num_decode))
+            self._committed_load(w)
+            if self.workers[w].role == DECODE_ROLE else 0.0
+            for w in self._poa_universe)
         req.hashes = tuple(block_hashes(req.tokens))
         fresh = self.router.indexer.matched_blocks(worker, req.tokens,
                                                    self.now)
@@ -343,7 +509,7 @@ class Simulator:
         pressure can convert free hits into paid onboards but never
         misses into hits.  The chain breaks at the first non-resident
         block: prefill recomputes the entire suffix from a true hole."""
-        kv = self.kvbm[w]
+        kv = self.workers[w].kvbm
         alpha = {"G2": self.cluster.alpha_g2, "G3": self.cluster.alpha_g3,
                  "G4": self.cluster.alpha_g4}
         onboard, latency = 0, 0.0
@@ -360,10 +526,11 @@ class Simulator:
     # --------------------------------------------------------- prefill ------
 
     def _dispatch_prefill(self):
-        for w in range(self.cluster.num_prefill):
-            if not self.prefill_busy[w] and self.prefill_queue:
-                req = self.prefill_queue.pop(0)
-                self.prefill_busy[w] = True
+        for wid in self.prefill_ids:
+            w = self.workers[wid]
+            if not w.busy and self.prefill_queue:
+                req = self.prefill_queue.popleft()
+                w.busy = True
                 req.prefill_start = self.now
                 # cache-warm routing skips recomputation; onboardable
                 # G2/G3 blocks are fetched, not recomputed (they pay Eq. 6
@@ -374,10 +541,18 @@ class Simulator:
                 sg = self.cluster.service_sigma
                 service = (work / self.cluster.prefill_rate) \
                     * float(self.rng.lognormal(-0.5 * sg * sg, sg))
-                self._push(self.now + service, "prefill_busy_done", (w, req))
+                self.metrics.histogram("prefill_service", window_s=30.0
+                                       ).observe(service, self.now)
+                self._push(self.now + service, "prefill_busy_done",
+                           (wid, req))
 
-    def _on_prefill_busy_done(self, w: int, req: SimRequest):
-        self.prefill_busy[w] = False
+    def _on_prefill_busy_done(self, wid: int, req: SimRequest):
+        w = self.workers[wid]
+        w.busy = False
+        if w.pending_role == DECODE_ROLE:
+            # deferred Planner flip: the worker was mid-prefill when the
+            # move was decided; it joins the decode pool now that it's idle
+            self._finish_flip_to_decode(w)
         self._dispatch_prefill()
         self._push(self.now + self.cluster.prefill_base, "prefill_compute_done",
                    req)
@@ -385,15 +560,33 @@ class Simulator:
     def _on_prefill_compute_done(self, req: SimRequest):
         """Prefill finished: KV transfer to the decode worker, subject to its
         admission cap (stalls here are the herding pathology)."""
-        w = req.decode_worker
-        if self.decode_running[w] >= self.specs[w].decode_cap:
-            self.transfer_queue[w].append(req)
+        w = self.workers[req.decode_worker]
+        if w.role != DECODE_ROLE or w.draining:
+            # The target flipped (or is draining) while this request was in
+            # the prefill pipeline: re-route to a live decode worker.
+            # Prefill work already ran discounted by the *old* target's
+            # overlap — that KV is still resident on the draining worker
+            # (it flushes only after its last decode), so nothing is
+            # recomputed; the switching cost the request pays is the
+            # re-quoted transfer, kv_transfer·(1−overlap) against the new,
+            # usually colder target.
+            self._route(req)
+        self._deliver(req)
+
+    def _deliver(self, req: SimRequest):
+        w = self.workers[req.decode_worker]
+        if w.running >= w.spec.decode_cap:
+            w.transfer_queue.append(req)
             return
         self._admit_decode(req)
 
     def _admit_decode(self, req: SimRequest):
-        w = req.decode_worker
-        spec = self.specs[w]
+        w = self.workers[req.decode_worker]
+        if w.role != DECODE_ROLE or w.draining:
+            raise RuntimeError(
+                f"drain-protocol violation: request {req.rid} admitted to "
+                f"{'draining' if w.draining else w.role} worker {w.wid}")
+        spec = w.spec
         # onboarding G2/G3 blocks into HBM delays first token by the
         # per-tier Eq. 6 latency (quoted at scheduling) — cheaper than the
         # full-recompute path a true miss pays in prefill work.
@@ -401,17 +594,16 @@ class Simulator:
             + req.onboard_latency
         req.prefill_end = self.now + transfer
         req.decode_start = req.prefill_end
-        self.router.indexer.insert(w, req.tokens, self.now)
-        kv = self.kvbm[w]
+        self.router.indexer.insert(w.wid, req.tokens, self.now)
+        kv = w.kvbm
         for h in req.hashes:
             kv.allocate(h, self.now)
             kv.access(h, self.now)
             kv.pin(h)        # active decode state must never be demoted
             kv.onboard(h)    # decode needs HBM residency: pull into G1
-        self.decode_running[w] += 1
-        self.peak_decode_running[w] = max(self.peak_decode_running[w],
-                                          self.decode_running[w])
-        itl = spec.itl_base + spec.itl_slope * self.decode_running[w]
+        w.running += 1
+        w.peak_running = max(w.peak_running, w.running)
+        itl = spec.itl_base + spec.itl_slope * w.running
         dur = req.output_tokens * itl
         self._push(req.decode_start + dur, "decode_done", req)
 
@@ -419,25 +611,146 @@ class Simulator:
 
     def _on_decode_done(self, req: SimRequest):
         req.finish_t = self.now
-        w = req.decode_worker
-        self.decode_running[w] -= 1
+        w = self.workers[req.decode_worker]
+        w.running -= 1
         # Release the decode pins: the blocks stay resident (that is the
         # prefix-cache value) but become demotion-eligible again.
         for h in req.hashes:
-            self.kvbm[w].unpin(h)
+            w.kvbm.unpin(h)
         self.in_flight -= 1
         self.completed.append(req)
         self.metrics.histogram("ttft", window_s=30.0).observe(req.ttft, self.now)
         self.metrics.histogram("itl", window_s=30.0).observe(req.itl, self.now)
+        self.metrics.histogram("decode_residency", window_s=30.0).observe(
+            req.finish_t - req.decode_start, self.now)
         self.poa.record(CompletedRequest(
-            request_id=str(req.rid), worker=w,
+            request_id=str(req.rid), worker=w.wid,
             latency=req.finish_t - req.submit_t,
             overlap=req.overlaps_all, finish_time=self.now,
             loads=req.loads_at_schedule))
-        if self.transfer_queue[w]:
-            nxt = self.transfer_queue[w].pop(0)
+        if w.transfer_queue:
+            nxt = w.transfer_queue.popleft()
             self._admit_decode(nxt)
+        elif w.draining and w.running == 0:
+            # last running decode finished: complete the Planner's flip
+            self._finish_flip_to_prefill(w)
         self._maybe_submit()
+
+    # ------------------------------------------------ Game 1 repartition ----
+
+    def _start_drain_to_prefill(self, w: Worker):
+        """Drain protocol, step 1 (decode → prefill): stop admitting — the
+        router marks the worker unhealthy so no new request routes to it —
+        and re-route its stalled transfers; running decodes finish on
+        their own clock."""
+        w.draining = True
+        self.router.set_health(w.wid, False)
+        stalled = list(w.transfer_queue)
+        w.transfer_queue.clear()
+        for req in stalled:
+            self._route(req)
+            self._deliver(req)
+        if w.running == 0:
+            self._finish_flip_to_prefill(w)
+
+    def _finish_flip_to_prefill(self, w: Worker):
+        """Drain protocol, step 2: flush the KVBM (every freed G1 block
+        fires ``on_g1_evict`` → ``remove_worker_block``) and clear any
+        remaining KvIndexer claims, then join the prefill pool."""
+        for h in list(w.kvbm.blocks):
+            w.kvbm.free(h)
+        self.router.indexer.clear_worker(w.wid)
+        w.kvbm = None
+        w.draining = False
+        w.role = PREFILL_ROLE
+        w.busy = False
+        self.decode_ids.remove(w.wid)
+        self.prefill_ids.append(w.wid)
+        self.prefill_ids.sort()
+        self.poa.capacities = self._poa_capacities()
+        self.role_flips.append((self.now, w.wid, "to_prefill"))
+        self._dispatch_prefill()     # new prefill capacity is live now
+
+    def _start_flip_to_decode(self):
+        """Prefill → decode: flip the lowest-wid idle prefill worker
+        immediately, or flag the lowest-wid one to flip when its current
+        prefill job finishes (prefill jobs are tens of ms)."""
+        idle = [wid for wid in self.prefill_ids if not self.workers[wid].busy]
+        if idle:
+            self._finish_flip_to_decode(self.workers[idle[0]])
+        else:
+            self.workers[self.prefill_ids[0]].pending_role = DECODE_ROLE
+
+    def _finish_flip_to_decode(self, w: Worker):
+        w.pending_role = None
+        w.role = DECODE_ROLE
+        w.kvbm = self._new_kvbm(w)   # cache-cold: the real switching cost
+        w.running = 0
+        w.peak_running = 0           # a fresh stint, not the pre-flip one
+        w.transfer_queue.clear()
+        self.prefill_ids.remove(w.wid)
+        self.decode_ids.append(w.wid)
+        self.decode_ids.sort()
+        self.router.add_worker(w.wid, float(w.spec.decode_cap))
+        self.poa.capacities = self._poa_capacities()
+        self.role_flips.append((self.now, w.wid, "to_decode"))
+
+    def _response_model(self) -> Optional[ResponseModel]:
+        """Profiled Game 1 response curves at the measured operating point
+        (arrival rate, prefill service time, decode residency)."""
+        cfg = self.planner_config
+        win = cfg.measure_window
+        while self._arrivals and self._arrivals[0] < self.now - win:
+            self._arrivals.popleft()
+        span = min(self.now, win)
+        if span <= 0.0 or not self._arrivals:
+            return None
+        lam = len(self._arrivals) / span
+        s_p = self.metrics.histogram("prefill_service").mean(self.now)
+        if s_p <= 0.0:
+            s_p = (1.0 + 0.5 * self.cluster.miss_penalty) \
+                / self.cluster.prefill_rate
+        dspecs = [self.workers[wid].spec for wid in self.decode_ids] \
+            or [self.workers[0].spec]
+        itl_base = sum(s.itl_base for s in dspecs) / len(dspecs)
+        itl_slope = sum(s.itl_slope for s in dspecs) / len(dspecs)
+        cap = sum(s.decode_cap for s in dspecs) / len(dspecs)
+        kv_transfer = sum(s.kv_transfer for s in dspecs) / len(dspecs)
+        t_dec = self.metrics.histogram("decode_residency").mean(self.now)
+        if t_dec <= 0.0:
+            t_dec = self.workload.output_tokens * itl_base
+        slack = max(cfg.ttft_slo - self.cluster.prefill_base - kv_transfer,
+                    1e-3)
+        return ResponseModel(arrival_rate=lam, prefill_service=s_p,
+                             decode_residency=t_dec, itl_base=itl_base,
+                             itl_slope=itl_slope, decode_cap=cap,
+                             ttft_slack=slack, itl_slo=cfg.itl_slo)
+
+    def _on_plan(self):
+        """Third control-plane event (Game 1): feed the Planner the Eq. 5
+        best-response marginals of the profiled response curves at the
+        polled operating point; execute at most one role flip per adjust
+        interval through the drain protocol."""
+        busy_flip = any(w.draining or w.pending_role for w in self.workers)
+        if not busy_flip:
+            model = self._response_model()
+            if model is not None:
+                gp, gd = len(self.prefill_ids), len(self.decode_ids)
+                m_p, m_d = model.marginals(gp, gd)
+                if max(m_p, m_d) >= self.planner_config.min_signal:
+                    move = self.planner.step(self.now, ttft_violation=m_p,
+                                             itl_violation=m_d)
+                    if move == "to_prefill":
+                        victim = min(self._live_decode_ids(),
+                                     key=lambda wid:
+                                     (self._committed_load(wid), wid))
+                        self._start_drain_to_prefill(self.workers[victim])
+                    elif move == "to_decode":
+                        self._start_flip_to_decode()
+        nxt = self.now + self.planner_config.adjust_interval
+        if nxt <= self.workload.total_duration() or (
+                self.workload.mode != "closed" and self.in_flight > 0):
+            self._push(nxt, "plan")
 
     # ------------------------------------------------------- controller -----
 
@@ -459,12 +772,12 @@ class Simulator:
             ttft_p99 = max(ttft_p99, hol)
         regime = self.detector.observe(ttft_p99, self.now)
         poa = self.poa.current_poa(self.now)
-        self.poll_log.append({
+        entry = {
             "t": self.now, "ttft_p99": ttft_p99, "regime": int(regime),
             "poa": poa, "poa_n": self.poa.window_size(self.now),
             "queue": len(self.prefill_queue),
             "decode_load": [self._committed_load(w)
-                            for w in range(self.cluster.num_decode)],
+                            for w in self.decode_ids],
             "concurrency": self.workload.concurrency_at(self.now),
             # Game 2 observables: Prop. 5's ρ per worker, tier residency,
             # and the demotion/promotion churn counters.
@@ -472,7 +785,24 @@ class Simulator:
             "tiers": [kv.tier_distribution() for kv in self.kvbm],
             "demotions": [kv.demotions for kv in self.kvbm],
             "promotions": [kv.promotions for kv in self.kvbm],
-        })
+            # Game 1 observables: per-slot roles ("P"/"D", draining="d")
+            # over the unified pool, and the realized P/D split.
+            "roles": "".join(
+                ("d" if w.draining else "D") if w.role == DECODE_ROLE
+                else "P" for w in self.workers),
+            "split": [len(self.prefill_ids), len(self.decode_ids)],
+        }
+        if self.planner is not None:
+            pc = self.planner_config
+            v_t, v_i = violation_rates(self.metrics, pc.ttft_slo, pc.itl_slo,
+                                       self.now)
+            entry["ttft_viol"] = v_t
+            entry["itl_viol"] = v_i
+            model = self._response_model()
+            if model is not None:
+                entry["resource_game"] = self.poa.resource_game(
+                    model, len(self.prefill_ids), len(self.workers))
+        self.poll_log.append(entry)
         for kv in self.kvbm:
             kv.decay()
         nxt = self.now + self.detector.config.poll_interval
@@ -492,10 +822,11 @@ class Simulator:
         """Event-plane metric propagation: the router's load view is a
         periodic snapshot (staleness is what makes greedy τ=0 routing herd
         under saturation — the pathology τ>0 randomization suppresses)."""
-        for w in range(self.cluster.num_decode):
+        for wid in self.decode_ids:
             # b_active counts blocks ON the worker; queued NIXL transfers are
             # invisible to the router (incomplete-information pathology).
-            self.router.workers[w].active_blocks = self.decode_running[w]
+            self.router.workers[wid].active_blocks = \
+                self.workers[wid].running
         nxt = self.now + self.cluster.metrics_interval
         if nxt <= self.workload.total_duration() + 30.0 or (
                 self.workload.mode != "closed" and self.in_flight > 0):
@@ -505,6 +836,8 @@ class Simulator:
         total = self.workload.total_duration()
         self._push(0.0, "poll")
         self._push(0.0, "sync")
+        if self.planner is not None:
+            self._push(self.planner_config.adjust_interval, "plan")
         if self.workload.mode == "closed":
             t = 0.0
             while t < total:  # client ticks follow the ramp
@@ -538,6 +871,8 @@ class Simulator:
                 self._on_poll()
             elif kind == "sync":
                 self._on_sync()
+            elif kind == "plan":
+                self._on_plan()
         return SimResult(self)
 
 
@@ -557,14 +892,15 @@ class SimResult:
         self.completed = sim.completed
         self.poll_log = sim.poll_log
         self.switch_time = sim.switch_time
+        self.role_flips = sim.role_flips
 
     def _phase_reqs(self, phase: int) -> List[SimRequest]:
         return [r for r in self.completed if r.phase == phase]
 
-    def phase_stats(self, phase: int) -> PhaseStats:
-        reqs = self._phase_reqs(phase)
-        polls = [p for p in self.poll_log
-                 if self.sim.workload.phase_of(p["t"]) == phase]
+    def _aggregate(self, reqs: List[SimRequest],
+                   polls: List[dict]) -> PhaseStats:
+        """Phase-agnostic aggregation over an explicit (requests, polls)
+        slice — stats never mutate shared request state."""
         # exclude warm-up polls whose Eq. 12 window has not filled yet (the
         # denominator is count-normalized); keep all polls when the load is
         # too low to ever fill it (the paper's dagger-marked artifact rows).
@@ -584,11 +920,15 @@ class SimResult:
             ttft_p99=p99(ttfts), itl_p99=p99(itls),
             rps=len(reqs) / max(dur, 1e-9), n=len(reqs))
 
+    def phase_stats(self, phase: int) -> PhaseStats:
+        return self._aggregate(
+            self._phase_reqs(phase),
+            [p for p in self.poll_log
+             if self.sim.workload.phase_of(p["t"]) == phase])
+
     def overall(self) -> PhaseStats:
-        saved = [r.phase for r in self.completed]
-        for r in self.completed:
-            r.phase = 0
-        out = self.phase_stats(0)
-        for r, p in zip(self.completed, saved):
-            r.phase = p
-        return out
+        """Whole-run stats over every completed request and every poll
+        (previously implemented by temporarily rewriting each request's
+        ``phase`` — which mutated shared state and silently dropped the
+        polls of every phase but the first from multi-phase runs)."""
+        return self._aggregate(self.completed, self.poll_log)

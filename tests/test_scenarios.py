@@ -106,6 +106,27 @@ def test_hetero_routing_respects_capacity_shares():
 def test_topology_parses_prefill_pool():
     cfg = ClusterConfig.for_model("llama-3.1-70b", "2P/4D")
     assert cfg.num_prefill == 2 and cfg.num_decode == 4
+    lower = ClusterConfig.for_model("llama-3.1-70b", "1p/2d")
+    assert lower.num_prefill == 1 and lower.num_decode == 2
+
+
+@pytest.mark.parametrize("bad", ["1P5D", "1p/", "P/D", "2D/1P", "1P/2D/3D",
+                                 "", "0P/2D", "1P/0D", "x1P/2D"])
+def test_topology_rejects_malformed_strings(bad):
+    """`for_model` used to silently mis-parse these (e.g. "1P5D" →
+    int("1P5D".rstrip("Pp")) crash with an unrelated message)."""
+    with pytest.raises(ValueError, match="topology"):
+        ClusterConfig.for_model("llama-3.1-70b", bad)
+
+
+def test_registry_includes_elastic_pools():
+    """Game 1 axis: the elastic family carries a planner_config and spans
+    closed-loop and open-loop workloads."""
+    elastic = {n: get_scenario(n, fast=True) for n in ALL_SCENARIOS
+               if n.startswith("elastic-")}
+    assert len(elastic) >= 3
+    assert all("planner_config" in s.sim_kwargs for s in elastic.values())
+    assert {s.workload.mode for s in elastic.values()} == {"closed", "open"}
 
 
 # ----------------------------------------------------------- workloads ------
