@@ -58,7 +58,8 @@ def main() -> None:
         hold, iters = 12.0, 1
 
     from benchmarks import (baselines_static_routing, bench_kernels,
-                            bench_router, exp2_saturation_detection,
+                            bench_router, bench_scale,
+                            exp2_saturation_detection,
                             fig5_poa_curves, game1_repartition,
                             prop5_g1_sweep, table4_equilibrium,
                             table5_crossmodel, table6_pareto,
@@ -79,6 +80,7 @@ def main() -> None:
         "baselines": lambda: baselines_static_routing.run(min(hold, 90.0)),
         "kernels": bench_kernels.run,
         "router": bench_router.run,
+        "scale": lambda: bench_scale.run(smoke=smoke or args.fast),
         "scenarios": _scenario_sweep,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -62,8 +62,11 @@ class AdaptiveRouter:
         else:
             cfg = self.static_config
         t0 = time.perf_counter()
+        # ``now`` must reach the router: the indexer evaluates TTL claim
+        # freshness against it, and defaulting to t=0 meant cache-claim
+        # expiry never fired through the adaptive controller.
         worker, overlap, _ = self.router.best_worker(
-            tokens, router_config_override=cfg)
+            tokens, router_config_override=cfg, now=now)
         dt = time.perf_counter() - t0
         g = self.metrics
         if self.poa_tracker is not None:

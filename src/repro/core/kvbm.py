@@ -100,6 +100,38 @@ class KVBlockManager:
             self._promote(blk)
         return blk.tier
 
+    def admit_blocks(self, block_ids, now: float = 0.0):
+        """Admission hot path: allocate-or-touch, pin, and onboard every
+        block of a request in one pass — one dict probe per block instead
+        of the four of ``allocate``/``access``/``pin``/``onboard``.
+        Step-for-step identical to that call sequence (same frequency
+        doublings, same promotion order, hence the same victim choices),
+        just without re-resolving the block each time."""
+        blocks = self.blocks
+        for bid in block_ids:
+            blk = blocks.get(bid)
+            if blk is None:
+                # allocate() then access() on the fresh G1 block: the
+                # access doubles the starting frequency, nothing promotes
+                self._make_room("G1")
+                self._seq += 1
+                blk = Block(bid, "G1", frequency=2.0, seq=self._seq,
+                            pin_count=1, last_touch=now)
+                blocks[bid] = blk
+                self.tier_usage["G1"] += 1
+                continue
+            # allocate() on a resident block is an access(); admission
+            # then accesses again — two doublings, each promoting one
+            # tier when the block sits below G1
+            for _ in range(2):
+                blk.last_touch = max(blk.last_touch, now)
+                blk.frequency = max(blk.frequency, 1.0) * 2.0
+                if blk.tier != "G1":
+                    self._promote(blk)
+            blk.pin_count += 1
+            while blk.tier != "G1":   # onboard(): decode needs HBM
+                self._promote(blk)
+
     def access_cost(self, block_id: int) -> float:
         blk = self.blocks.get(block_id)
         if blk is None:

@@ -109,6 +109,11 @@ class PoATracker:
     (``window_count``) — the count bound is what makes the below-saturation
     plateau flat: the frozen OPT always prices the same number of windowed
     requests regardless of arrival rate.
+
+    ``dedup`` enables the large-pool OPT fast path: identical replicated
+    worker columns collapse into capacitated columns before the Hungarian
+    solve (see :meth:`opt_cost`); the dense legacy matrix is kept behind
+    ``dedup=False`` and pinned equal in tests.
     """
     num_workers: int
     window_s: float = 30.0
@@ -117,6 +122,7 @@ class PoATracker:
     params: LatencyParams = POA_FROZEN
     cache_weight: float = POA_CACHE_WEIGHT
     capacities: Sequence[float] = ()    # per-worker relative capacity (hetero)
+    dedup: bool = True                  # collapse identical OPT columns
     _window: Deque[CompletedRequest] = field(default_factory=deque)
     _last: float = float("nan")
 
@@ -143,7 +149,17 @@ class PoATracker:
         change loads: every worker column carries the Eq. 9 latency at the
         window's balanced per-worker load n̄ = |W|/m, minus the cache-overlap
         credit w_c·o_ij.  OPT therefore lower-bounds the attainable optimum
-        (the paper's 'PoA is an upper bound' argument)."""
+        (the paper's 'PoA is an upper bound' argument).
+
+        Large-pool path (``dedup=True``): workers whose frozen cost column
+        is identical over the whole window — the common case, since most
+        workers have zero overlap with most requests and equal balanced
+        load — collapse into ONE capacitated column replicated
+        min(group capacity, n) times.  The capacitated problem has the
+        same optimum as the dense matrix (an assignment never uses more
+        than n replicas of interchangeable columns), so both the scipy
+        path and the JV fallback solve a matrix whose width scales with
+        the number of *distinct* columns instead of workers × capacity."""
         n = len(reqs)
         if n == 0:
             return 0.0
@@ -168,19 +184,35 @@ class PoATracker:
             reps = np.round(shares * w * cap).astype(np.int64)
             reps[shares > 0] = np.maximum(1, reps[shares > 0])
         cols = int(reps.sum())
-        cost = np.zeros((n, cols))
+        ov = np.zeros((n, w))
         for i, rq in enumerate(reqs):
-            ov = np.asarray(rq.overlap, dtype=np.float64)
-            if ov.shape[0] != w:
-                ov = np.zeros(w)
-            per_w = base_w - self.cache_weight * ov        # (w,)
-            cost[i] = np.repeat(per_w, reps)
+            o = np.asarray(rq.overlap, dtype=np.float64)
+            if o.shape[0] == w:
+                ov[i] = o
+        per_w = base_w[None, :] - self.cache_weight * ov   # (n, w)
+        scale = 1.0
         if n > cols:
-            idx = hungarian(cost[:cols])
-            per = cost[np.arange(cols), idx]
-            return float(per.sum() * (n / cols))
+            # truncation: price only the first `cols` requests one-to-one,
+            # then scale the per-request optimum back up to the window
+            per_w = per_w[:cols]
+            scale = n / cols
+            n = cols
+        if self.dedup:
+            # group workers by their exact column bytes (no sort needed;
+            # insertion order keeps the solve deterministic)
+            cols_t = np.ascontiguousarray(per_w.T)
+            groups: dict = {}
+            for j in range(cols_t.shape[0]):
+                groups.setdefault(cols_t[j].tobytes(), []).append(j)
+            first = [g[0] for g in groups.values()]
+            group_reps = np.minimum(
+                np.asarray([int(reps[g].sum()) for g in groups.values()],
+                           dtype=np.int64), n)
+            cost = np.repeat(per_w[:, first], group_reps, axis=1)
+        else:
+            cost = np.repeat(per_w, reps, axis=1)          # (n, cols) dense
         idx = hungarian(cost)
-        return float(cost[np.arange(n), idx].sum())
+        return float(cost[np.arange(n), idx].sum() * scale)
 
     def window_size(self, now: Optional[float] = None) -> int:
         reqs = list(self._window)

@@ -8,10 +8,19 @@ Worker selection (Eq. 2):            argmin (τ=0)  or  softmax(−c/τ) sample
 ``b_j^active`` — active decode blocks on worker j (load proxy).
 
 ``best_worker`` accepts a per-request ``router_config_override`` — the hook
-the paper's adaptive controller uses to switch (τ, ω) without restarts.
+the paper's adaptive controller uses to switch (τ, ω) without restarts —
+and a precomputed ``hashes`` memo so the request's block hashes are
+computed once per request instead of once per router call.
 The sequential greedy assignment this implements is best-response dynamics
 in the routing congestion game (paper §4.3).
-"""
+
+Large-pool fast path: for τ=0 pools of ``VECTORIZE_MIN_WORKERS`` or more,
+the Eq. 1 argmin runs on a cached numpy load vector (rebuilt only when a
+worker's load/health/capacity actually changes — ``WorkerState`` fields
+are cache-invalidating properties) with elementwise operations in the
+same order as the scalar loop, so results are bit-exact with the legacy
+path while the per-decision cost drops from O(workers) Python arithmetic
+to a handful of C-level vector ops."""
 from __future__ import annotations
 
 import math
@@ -19,7 +28,9 @@ import random
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.radix import KvIndexer
+import numpy as np
+
+from repro.core.radix import KvIndexer, block_hashes
 
 
 @dataclass(frozen=True)
@@ -28,24 +39,89 @@ class KvRouterConfig:
     temperature: float = 0.0           # τ (router_temperature)
 
 
-@dataclass
 class WorkerState:
-    worker_id: int
-    active_blocks: int = 0             # b_j^active
-    healthy: bool = True
-    capacity: float = 1.0              # relative decode capacity (slots)
+    """Mutable routing-table entry.  ``active_blocks``/``healthy``/
+    ``capacity`` are properties so a KvPushRouter can invalidate its
+    cached dense load view whenever the value actually changes; a
+    standalone WorkerState (baseline routers, tests) has no router
+    backref and behaves like the plain record it used to be."""
+
+    __slots__ = ("worker_id", "_active_blocks", "_healthy", "_capacity",
+                 "_router")
+
+    def __init__(self, worker_id: int, active_blocks: float = 0,
+                 healthy: bool = True, capacity: float = 1.0):
+        self.worker_id = worker_id
+        self._active_blocks = active_blocks
+        self._healthy = healthy
+        self._capacity = capacity
+        self._router: Optional["KvPushRouter"] = None
+
+    def __repr__(self):
+        return (f"WorkerState(worker_id={self.worker_id}, "
+                f"active_blocks={self._active_blocks}, "
+                f"healthy={self._healthy}, capacity={self._capacity})")
+
+    @property
+    def active_blocks(self):
+        return self._active_blocks
+
+    @active_blocks.setter
+    def active_blocks(self, value):
+        if value != self._active_blocks:
+            self._active_blocks = value
+            if self._router is not None:
+                self._router._state_cache = None
+
+    @property
+    def healthy(self):
+        return self._healthy
+
+    @healthy.setter
+    def healthy(self, value):
+        if value != self._healthy:
+            self._healthy = value
+            if self._router is not None:
+                self._router._state_cache = None
+
+    @property
+    def capacity(self):
+        return self._capacity
+
+    @capacity.setter
+    def capacity(self, value):
+        if value != self._capacity:
+            self._capacity = value
+            if self._router is not None:
+                self._router._state_cache = None
 
 
 class KvPushRouter:
     """The router core; mirrors Dynamo's Python handler semantics."""
 
+    # Pools below this size route through the legacy scalar path — numpy
+    # call overhead beats the vector win on the paper's 2–5 worker pools.
+    VECTORIZE_MIN_WORKERS = 16
+
     def __init__(self, num_workers: int, config: Optional[KvRouterConfig] = None,
                  indexer: Optional[KvIndexer] = None, seed: int = 0):
-        self.workers: Dict[int, WorkerState] = {
-            i: WorkerState(i) for i in range(num_workers)}
+        self.workers: Dict[int, WorkerState] = {}
         self.config = config or KvRouterConfig()
         self.indexer = indexer or KvIndexer()
         self._rng = random.Random(seed)
+        self.vectorized = True
+        # cached dense routing state:
+        # (healthy ids, id→position, loads array, ids ascending?)
+        self._state_cache: Optional[
+            Tuple[List[int], Dict[int, int], np.ndarray, bool]] = None
+        for i in range(num_workers):
+            self._enlist(WorkerState(i))
+
+    def _enlist(self, st: WorkerState) -> WorkerState:
+        st._router = self
+        self.workers[st.worker_id] = st
+        self._state_cache = None
+        return st
 
     # ------------------------------------------------------------- costs ----
 
@@ -72,13 +148,30 @@ class KvPushRouter:
         return [self.workers[wid].active_blocks * (ref / cap)
                 for wid, cap in zip(ids, caps)]
 
+    def _dense_state(self) -> Tuple[List[int], Dict[int, int], np.ndarray,
+                                    bool]:
+        """Healthy ids, id→position map and numpy load vector, rebuilt only
+        when some worker's load/health/capacity changed since the last
+        decision (in the simulator that's the 1 s metric sync, not every
+        request)."""
+        cached = self._state_cache
+        if cached is None:
+            ids = self.healthy_ids()
+            cached = self._state_cache = (
+                ids,
+                {wid: i for i, wid in enumerate(ids)},
+                np.asarray(self._normalized_load(ids), dtype=np.float64),
+                all(a < b for a, b in zip(ids, ids[1:])))
+        return cached
+
     def costs(self, tokens: Sequence[int],
-              config: Optional[KvRouterConfig] = None, now: float = 0.0
+              config: Optional[KvRouterConfig] = None, now: float = 0.0,
+              hashes: Optional[Sequence[int]] = None
               ) -> Tuple[List[int], List[float], List[float]]:
         """Returns (worker_ids, costs c_j, overlap fractions o_j)."""
         cfg = config or self.config
         ids = self.healthy_ids()
-        overlaps = self.indexer.overlap_scores(tokens, ids, now)
+        overlaps = self.indexer.overlap_scores(tokens, ids, now, hashes=hashes)
         loads = self._normalized_load(ids)
         costs = []
         for ov, b_active in zip(overlaps, loads):
@@ -90,14 +183,20 @@ class KvPushRouter:
 
     def best_worker(self, tokens: Sequence[int],
                     router_config_override: Optional[KvRouterConfig] = None,
-                    now: float = 0.0) -> Tuple[int, float, List[float]]:
+                    now: float = 0.0,
+                    hashes: Optional[Sequence[int]] = None
+                    ) -> Tuple[int, float, List[float]]:
         """Returns (worker_id, overlap_score_of_chosen, overlap_per_worker).
 
         τ=0: deterministic argmin (Eq. 2 limit). τ>0: softmax over costs
         normalized by their spread (Dynamo's τ∈[0,1] operates on normalized
         costs; raw block counts would make any τ≤1 effectively greedy)."""
         cfg = router_config_override or self.config
-        ids, costs, overlaps = self.costs(tokens, cfg, now)
+        if (self.vectorized and self.indexer.aggregated
+                and cfg.temperature <= 0.0
+                and len(self.workers) >= self.VECTORIZE_MIN_WORKERS):
+            return self._best_worker_vectorized(tokens, cfg, now, hashes)
+        ids, costs, overlaps = self.costs(tokens, cfg, now, hashes=hashes)
         if not ids:
             raise RuntimeError("no healthy workers")
         if cfg.temperature <= 0.0 or len(ids) == 1:
@@ -118,11 +217,51 @@ class KvPushRouter:
                     break
         return ids[j], overlaps[j], overlaps
 
+    def _best_worker_vectorized(self, tokens: Sequence[int],
+                                cfg: KvRouterConfig, now: float,
+                                hashes: Optional[Sequence[int]]
+                                ) -> Tuple[int, float, List[float]]:
+        """τ=0 argmin on the cached load vector.  The sparse aggregated
+        walk yields only the warm workers; the dense overlap vector is
+        filled in C.  Elementwise operations run in the exact order of the
+        scalar loop (1−o, ×scale, ×ω, +load) and ties go to the smallest
+        worker id, so the choice is bit-exact with the legacy path."""
+        ids, pos, loads, ids_sorted = self._dense_state()
+        if not ids:
+            raise RuntimeError("no healthy workers")
+        if hashes is None:
+            hashes = block_hashes(tokens, self.indexer.block_size)
+        total = max(len(hashes), 1)
+        ov = np.zeros(len(ids))
+        for w, d in self.indexer.overlap_depths(hashes, now).items():
+            i = pos.get(w)
+            if i is not None:
+                ov[i] = d / total
+        cost = 1.0 - ov
+        cost *= self.PREFILL_BLOCK_SCALE
+        cost *= cfg.overlap_weight
+        cost += loads
+        if ids_sorted:
+            # np.argmin returns the first minimum; positions ascend with
+            # worker id, so this IS the (cost, id) tie-break
+            j = int(np.argmin(cost))
+        else:
+            ties = np.flatnonzero(cost == cost.min())
+            j = int(min(ties, key=lambda i: ids[i]))
+        return ids[j], float(ov[j]), ov.tolist()
+
     # --------------------------------------------------------- bookkeeping --
 
     def healthy_ids(self) -> List[int]:
         """Worker ids eligible for routing, in the table's stable order —
-        the positional universe of ``costs()``/``best_worker()`` overlaps."""
+        the positional universe of ``costs()``/``best_worker()`` overlaps.
+        Served from the dense-state cache when valid (any health change
+        invalidates it), so per-request callers don't rescan the table.
+        Always a fresh list: the cache's own list must never be aliased
+        to callers that might mutate it."""
+        cached = self._state_cache
+        if cached is not None:
+            return list(cached[0])
         return [w for w, st in self.workers.items() if st.healthy]
 
     def add_worker(self, worker_id: int, capacity: float = 1.0) -> WorkerState:
@@ -132,18 +271,20 @@ class KvPushRouter:
         reuses its table slot (keeping positional order stable)."""
         st = self.workers.get(worker_id)
         if st is None:
-            st = self.workers[worker_id] = WorkerState(worker_id)
+            st = self._enlist(WorkerState(worker_id))
         st.healthy = True
         st.active_blocks = 0
         st.capacity = max(capacity, 1e-9)
+        self._state_cache = None
         return st
 
     def on_schedule(self, worker_id: int, tokens: Sequence[int],
-                    decode_blocks: float = 1.0, now: float = 0.0):
+                    decode_blocks: float = 1.0, now: float = 0.0,
+                    hashes: Optional[Sequence[int]] = None):
         """Request placed: bump the load proxy and index its KV blocks."""
         st = self.workers[worker_id]
         st.active_blocks += decode_blocks
-        self.indexer.insert(worker_id, tokens, now)
+        self.indexer.insert(worker_id, tokens, now, hashes=hashes)
 
     def on_complete(self, worker_id: int, tokens: Sequence[int],
                     decode_blocks: float = 1.0):
@@ -161,10 +302,10 @@ class KvPushRouter:
 # ------------------------------------------------------ static baselines ----
 #
 # Every baseline implements the same ``best_worker(tokens,
-# router_config_override=None, now=0.0)`` signature as KvPushRouter, so
-# routing policies are drop-in interchangeable, and all of them skip
-# unhealthy workers (routing to a dead worker is not a baseline, it's a
-# bug).  Built from an int they keep a standalone all-healthy worker
+# router_config_override=None, now=0.0, hashes=None)`` signature as
+# KvPushRouter, so routing policies are drop-in interchangeable, and all of
+# them skip unhealthy workers (routing to a dead worker is not a baseline,
+# it's a bug).  Built from an int they keep a standalone all-healthy worker
 # table; built from a KvPushRouter they share its table, so
 # ``set_health`` on the router is visible to the baseline.
 
@@ -193,7 +334,8 @@ class RoundRobinRouter(_BaselineRouter):
         super().__init__(workers)
         self._i = 0
 
-    def best_worker(self, tokens, router_config_override=None, now=0.0):
+    def best_worker(self, tokens, router_config_override=None, now=0.0,
+                    hashes=None):
         ids = self._healthy_ids()
         w = ids[self._i % len(ids)]
         self._i += 1
@@ -205,7 +347,8 @@ class RandomRouter(_BaselineRouter):
         super().__init__(workers)
         self._rng = random.Random(seed)
 
-    def best_worker(self, tokens, router_config_override=None, now=0.0):
+    def best_worker(self, tokens, router_config_override=None, now=0.0,
+                    hashes=None):
         ids = self._healthy_ids()
         return ids[self._rng.randrange(len(ids))], 0.0, [0.0] * len(ids)
 
@@ -218,7 +361,8 @@ class PowerOfTwoRouter(_BaselineRouter):
         self.router = router
         self._rng = random.Random(seed)
 
-    def best_worker(self, tokens, router_config_override=None, now=0.0):
+    def best_worker(self, tokens, router_config_override=None, now=0.0,
+                    hashes=None):
         ids = self._healthy_ids()
         a, b = self._rng.sample(ids, 2) if len(ids) >= 2 else (ids[0], ids[0])
         # compare capacity-normalized utilization so heterogeneous pools

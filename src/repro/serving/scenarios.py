@@ -120,7 +120,8 @@ def build_simulator(name: str, seed: int = 0, **overrides) -> Simulator:
     ``routing_policy``, …) are split automatically: anything the factory
     does not consume is forwarded to ``Scenario.build``."""
     sim_keys = {"router_config", "adaptive", "detector_config",
-                "routing_policy", "regime_params", "planner_config"}
+                "routing_policy", "regime_params", "planner_config",
+                "lean_completed"}
     sim_kw = {k: overrides.pop(k) for k in list(overrides)
               if k in sim_keys}
     return get_scenario(name, **overrides).build(seed=seed, **sim_kw)
@@ -440,6 +441,72 @@ def _elastic_burst(rate: float = 10.0, duration_s: float = 240.0,
         workload=WorkloadConfig.diurnal(rate=rate, duration_s=duration_s,
                                         period_s=period_s, amplitude=0.8),
         sim_kwargs=kw)
+
+
+# Production-scale pools (large-pool hot path) -------------------------------
+#
+# Pools the size production disaggregated deployments run (tens to hundreds
+# of decode workers) under open-loop Poisson traffic with a wide Zipf
+# template mix — the regime where the per-worker radix walk, repeated
+# request hashing and the dense frozen-OPT matrix used to melt the control
+# plane.  The full variants push ~100k requests through the event loop
+# (``benchmarks/bench_scale.py`` tracks their wall time); ``fast=True``
+# keeps the pool size but shortens the horizon for smoke tests.
+
+def _scale_pool(num_decode: int, hetero: bool) -> ClusterConfig:
+    topo = f"{max(2, num_decode // 16)}P/{num_decode}D"
+    base = ClusterConfig.for_model("llama-3.1-70b", topo)
+    if not hetero:
+        return base
+    # mixed-generation pool: every fourth card is current-gen, the rest
+    # are previous-gen with fewer slots, less HBM and slower decode
+    big = DecodeWorkerSpec(decode_cap=56, g1_blocks=100_000,
+                           itl_base=0.0090, kv_transfer=0.012)
+    small = DecodeWorkerSpec(decode_cap=24, g1_blocks=40_000,
+                             itl_base=0.0135, itl_slope=0.00001,
+                             kv_transfer=0.020)
+    pool = tuple(big if w % 4 == 0 else small for w in range(num_decode))
+    return replace(base, decode_workers=pool)
+
+
+def _scale_scenario(num_decode: int, hetero: bool, num_requests: int,
+                    num_templates: int, fast: bool, **kw) -> Scenario:
+    if fast:
+        num_requests = min(num_requests, 1500)
+    rate = 2.0 * num_decode          # load scales with the pool
+    kw.setdefault("lean_completed", True)
+    return Scenario(
+        name="", description="",
+        cluster=_scale_pool(num_decode, hetero),
+        workload=replace(
+            WorkloadConfig.poisson(rate=rate,
+                                   duration_s=num_requests / rate),
+            num_templates=num_templates, output_tokens=32),
+        sim_kwargs=kw)
+
+
+@_reg("scale-64",
+      "64 homogeneous decode workers (4P/64D), 100k open-loop Poisson "
+      "requests over a 64-template Zipf mix")
+def _scale_64(num_requests: int = 100_000, num_templates: int = 64,
+              fast: bool = False, **kw) -> Scenario:
+    return _scale_scenario(64, False, num_requests, num_templates, fast, **kw)
+
+
+@_reg("scale-128",
+      "128-worker mixed-generation decode pool (8P/128D), 100k open-loop "
+      "Poisson requests over a 96-template Zipf mix")
+def _scale_128(num_requests: int = 100_000, num_templates: int = 96,
+               fast: bool = False, **kw) -> Scenario:
+    return _scale_scenario(128, True, num_requests, num_templates, fast, **kw)
+
+
+@_reg("scale-256",
+      "256 homogeneous decode workers (16P/256D), 100k open-loop Poisson "
+      "requests over a 128-template Zipf mix")
+def _scale_256(num_requests: int = 100_000, num_templates: int = 128,
+               fast: bool = False, **kw) -> Scenario:
+    return _scale_scenario(256, False, num_requests, num_templates, fast, **kw)
 
 
 # Trace replay ---------------------------------------------------------------

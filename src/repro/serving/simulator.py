@@ -250,9 +250,19 @@ class Simulator:
                  routing_policy: str = "kv",       # kv|round_robin|random|p2c
                  seed: int = 0,
                  regime_params: Optional[dict] = None,
-                 planner_config: Optional[PlannerConfig] = None):
+                 planner_config: Optional[PlannerConfig] = None,
+                 lean_completed: bool = False):
         self.cluster = cluster
         self.workload = workload
+        # Large-pool scenarios keep 100k+ completed requests around; the
+        # per-request O(workers) overlap/load vectors are only consumed by
+        # the PoA tracker (which holds its own windowed reference), so lean
+        # mode drops them from a request once it is fully accounted.
+        self.lean_completed = lean_completed
+        # (template, input_tokens) → (tokens, chained block hashes): every
+        # request of a template shares the same prompt, so tokenization and
+        # hashing happen once per template instead of once per request.
+        self._template_cache: dict = {}
         self.now = 0.0
         self._events: List[Tuple[float, int, str, object]] = []
         self._eid = itertools.count()
@@ -436,10 +446,16 @@ class Simulator:
         self._submit(template, entry.input_tokens, entry.output_tokens)
 
     def _submit(self, template: int, input_tokens: int, output_tokens: int):
+        cached = self._template_cache.get((template, input_tokens))
+        if cached is None:
+            toks = template_tokens(template, input_tokens)
+            cached = (toks, tuple(block_hashes(toks)))
+            self._template_cache[(template, input_tokens)] = cached
         req = SimRequest(rid=next(self._rid), template=template,
-                         tokens=template_tokens(template, input_tokens),
+                         tokens=cached[0],
                          output_tokens=output_tokens,
                          submit_t=self.now,
+                         hashes=cached[1],
                          phase=self.workload.phase_of(self.now))
         self.in_flight += 1
         if self.planner is not None:   # λ telemetry: only the Planner reads
@@ -462,31 +478,44 @@ class Simulator:
         return tuple(vec)
 
     def _route(self, req: SimRequest):
-        """Decode-worker selection at arrival (Game 3 mechanism)."""
+        """Decode-worker selection at arrival (Game 3 mechanism).  The
+        request's chained block hashes are memoized on the request (once
+        per template, in fact) and threaded through every router/indexer
+        call — the pre-memo hot path hashed the same prompt up to four
+        times per routing decision."""
         cfg = self._active_router_config()
+        if not req.hashes:   # trace entries below one block still memoize
+            req.hashes = tuple(block_hashes(req.tokens))
         worker, overlap, overlaps = self.policy.best_worker(
-            req.tokens, router_config_override=cfg, now=self.now)
+            req.tokens, router_config_override=cfg, now=self.now,
+            hashes=req.hashes)
         if self.policy is not self.router:
             ids = self._live_decode_ids()
             overlaps = self.router.indexer.overlap_scores(
-                req.tokens, ids, self.now)
+                req.tokens, ids, self.now, hashes=req.hashes)
             overlap = overlaps[ids.index(worker)]
         else:
             ids = self.router.healthy_ids()
         req.decode_worker = worker
         req.overlap = overlap
         req.overlaps_all = self._dense(ids, overlaps)
-        req.loads_at_schedule = tuple(
-            self._committed_load(w)
-            if self.workers[w].role == DECODE_ROLE else 0.0
-            for w in self._poa_universe)
-        req.hashes = tuple(block_hashes(req.tokens))
-        fresh = self.router.indexer.matched_blocks(worker, req.tokens,
-                                                   self.now)
+        if not self.lean_completed:
+            # routing-time load telemetry, carried into CompletedRequest
+            # for offline analysis; skipped in lean mode (it is O(workers)
+            # per request and nothing on the PoA path consumes it)
+            workers = self.workers
+            req.loads_at_schedule = tuple(
+                (w.running + len(w.transfer_queue))
+                if w.role == DECODE_ROLE else 0.0
+                for w in (workers[wid] for wid in self._poa_universe))
+        # the chosen worker's fresh credited prefix, recovered from its
+        # overlap score (overlap = fresh / len(hashes) exactly) — the
+        # separate matched_blocks() walk was redundant
+        fresh = int(round(overlap * len(req.hashes)))
         req.onboard_frac, req.onboard_latency = self._tier_split(
             worker, req.hashes, fresh)
         self.router.on_schedule(worker, req.tokens, decode_blocks=0.0,
-                        now=self.now)
+                                now=self.now, hashes=req.hashes)
 
     def _tier_split(self, w: int, hashes: Tuple[int, ...],
                     fresh_blocks: int) -> Tuple[float, float]:
@@ -594,13 +623,11 @@ class Simulator:
             + req.onboard_latency
         req.prefill_end = self.now + transfer
         req.decode_start = req.prefill_end
-        self.router.indexer.insert(w.wid, req.tokens, self.now)
-        kv = w.kvbm
-        for h in req.hashes:
-            kv.allocate(h, self.now)
-            kv.access(h, self.now)
-            kv.pin(h)        # active decode state must never be demoted
-            kv.onboard(h)    # decode needs HBM residency: pull into G1
+        self.router.indexer.insert(w.wid, req.tokens, self.now,
+                                   hashes=req.hashes)
+        # allocate+access+pin+onboard per block, batched (admission pins
+        # active decode state in G1; see KVBlockManager.admit_blocks)
+        w.kvbm.admit_blocks(req.hashes, self.now)
         w.running += 1
         w.peak_running = max(w.peak_running, w.running)
         itl = spec.itl_base + spec.itl_slope * w.running
@@ -628,6 +655,12 @@ class Simulator:
             latency=req.finish_t - req.submit_t,
             overlap=req.overlaps_all, finish_time=self.now,
             loads=req.loads_at_schedule))
+        if self.lean_completed:
+            # the PoA window holds its own reference to the overlap/load
+            # vectors; dropping the request's copy bounds memory at
+            # O(window) instead of O(completed × workers)
+            req.overlaps_all = ()
+            req.loads_at_schedule = ()
         if w.transfer_queue:
             nxt = w.transfer_queue.popleft()
             self._admit_decode(nxt)

@@ -11,7 +11,7 @@ import dataclasses
 
 import pytest
 
-from repro.core.radix import block_hashes
+from repro.core.radix import KvIndexer, block_hashes
 from repro.serving.scenarios import build_simulator, list_scenarios
 from repro.serving.workload import template_tokens
 
@@ -87,6 +87,32 @@ def test_onboarding_cheaper_than_recompute_on_ttft():
         # per-block onboarding latency never exceeds the α_G4 ceiling,
         # which sits below the per-block recompute cost γ
         assert r.onboard_latency <= r.onboard_frac * n * c.alpha_g4 + 1e-9
+
+
+def test_reinsert_after_demotion_does_not_credit_deep_blocks():
+    """Regression: ``remove_worker_block`` used to pop the claim on the
+    one invalidated node but leave stale ``workers[worker]`` timestamps on
+    all deeper nodes.  A later re-insert of just the prefix re-opened the
+    walk from the root and overlap scoring credited the demoted deep
+    blocks again — blocks whose KV had left G1 long ago."""
+    ix = KvIndexer()
+    seq = template_tokens(0, 64)                 # 4 blocks
+    hs = block_hashes(seq)
+    ix.insert(0, seq)
+    ix.remove_worker_block(0, hs[1])             # KVBM demoted block 1
+    assert ix.matched_blocks(0, seq) == 1
+    # a new request recomputes only the first two blocks (32 tokens) and
+    # re-inserts that prefix; blocks 2-3 must stay uncredited
+    ix.insert(0, seq[:32])
+    assert ix.matched_blocks(0, seq) == 2
+    assert ix.overlap_scores(seq, [0]) == [0.5]
+    assert ix.num_blocks(0) == 2
+    # other workers' claims on the demoted chain are untouched
+    ix2 = KvIndexer()
+    ix2.insert(0, seq)
+    ix2.insert(1, seq)
+    ix2.remove_worker_block(0, hs[0])
+    assert ix2.overlap_scores(seq, [0, 1]) == [0.0, 1.0]
 
 
 def test_identity_path_large_g1():

@@ -41,6 +41,24 @@ def test_static_mode_ignores_regime():
     assert c.metrics.gauge("game_router_temperature").value == 0.0
 
 
+def test_route_forwards_now_so_ttl_expiry_fires():
+    """Regression: ``route`` used to drop ``now`` when calling
+    ``best_worker``, so the indexer evaluated TTL freshness at t=0 and
+    cache claims never expired through the adaptive controller."""
+    c = _controller(adaptive=False)
+    r = c.router
+    r.indexer.ttl = 2.0
+    tokens = list(range(64))
+    r.on_schedule(0, tokens, now=0.0)    # worker 0 warm for these tokens
+    r.workers[0].active_blocks = 5       # slightly busier than worker 1
+    # fresh claim: affinity (ω·20 saved) outweighs the load gap
+    w, ov = c.route(tokens, now=1.0)
+    assert (w, ov) == (0, 1.0)
+    # claim expired: the stale cache must not attract the request anymore
+    w, ov = c.route(tokens, now=10.0)
+    assert (w, ov) == (1, 0.0)
+
+
 def test_routing_cost_histogram_populated():
     c = _controller()
     for i in range(5):

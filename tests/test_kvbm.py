@@ -154,3 +154,58 @@ def test_tier_usage_invariant():
     for t, used in kv.tier_usage.items():
         assert used <= kv.capacity[t]
         assert used == sum(1 for blk in kv.blocks.values() if blk.tier == t)
+
+
+def test_admit_blocks_equivalent_to_call_sequence():
+    """``admit_blocks`` is the batched admission hot path; it must leave
+    the manager in the identical state as the allocate/access/pin/onboard
+    sequence it replaces — tiers, frequencies, pins, counters, and
+    ``on_g1_evict`` firings — across decay churn and tiny capacities
+    (promotion/demotion pressure)."""
+    import random
+
+    def build():
+        evicted = []
+        kv = KVBlockManager({"G1": 3, "G2": 4, "G3": 4},
+                            on_g1_evict=evicted.append)
+        return kv, evicted
+
+    def state(kv):
+        return (sorted((b.block_id, b.tier, b.frequency, b.pin_count,
+                        b.seq, b.last_touch) for b in kv.blocks.values()),
+                kv.tier_usage, kv.evictions, kv.promotions, kv.demotions)
+
+    rng = random.Random(0)
+    script = []          # (op, args) replayed identically on both managers
+    for step in range(300):
+        r = rng.random()
+        if r < 0.55:
+            script.append(("admit", tuple(rng.randrange(12)
+                                          for _ in range(rng.randrange(1, 5))),
+                           float(step)))
+        elif r < 0.75:
+            script.append(("unpin", rng.randrange(12)))
+        elif r < 0.9:
+            script.append(("decay",))
+        else:
+            script.append(("free", rng.randrange(12)))
+
+    a, a_ev = build()    # batched
+    b, b_ev = build()    # legacy four-call sequence
+    for op in script:
+        if op[0] == "admit":
+            _, ids, now = op
+            a.admit_blocks(ids, now)
+            for bid in ids:
+                b.allocate(bid, now)
+                b.access(bid, now)
+                b.pin(bid)
+                b.onboard(bid)
+        elif op[0] == "unpin":
+            a.unpin(op[1]), b.unpin(op[1])
+        elif op[0] == "decay":
+            a.decay(), b.decay()
+        else:
+            a.free(op[1]), b.free(op[1])
+        assert state(a) == state(b)
+        assert a_ev == b_ev

@@ -91,3 +91,50 @@ def test_more_workers_lower_opt():
 def test_empty_window_nan():
     tr = PoATracker(num_workers=2)
     assert np.isnan(tr.current_poa())
+
+
+def test_truncation_branch_scaled_lower_bound_vs_bruteforce():
+    """n > cols: OPT prices the first ``cols`` requests one-to-one and
+    scales by n/cols.  Pin that against brute force on an instance small
+    enough to enumerate (2 workers × capacity 2 = 4 columns, 6 requests),
+    for the dedup and the dense path both."""
+    overlaps = [[0.9, 0.0], [0.0, 0.4], [0.2, 0.2],
+                [0.7, 0.1], [0.0, 0.0], [0.5, 0.5]]
+    reqs = [_req(i, 1.0, overlap=o) for i, o in enumerate(overlaps)]
+    n, cols = len(reqs), 4
+    got = {}
+    for dedup in (True, False):
+        tr = PoATracker(num_workers=2, capacity=2, dedup=dedup)
+        got[dedup] = tr.opt_cost(reqs)
+    assert got[True] == pytest.approx(got[False], abs=0.0)   # identical
+    # brute force the truncated square problem, then apply the same scale
+    tr = PoATracker(num_workers=2, capacity=2, dedup=False)
+    from repro.core.latency import latency
+    base = float(latency(np.asarray(n / 2), tr.params))
+    cost = np.array([[base - tr.cache_weight * o for o in ov]
+                     for ov in overlaps])[:cols]
+    cost = np.repeat(cost, [2, 2], axis=1)
+    assert got[False] == pytest.approx(_brute_force(cost) * (n / cols))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_column_dedup_matches_dense_matrix(seed):
+    """Collapsing identical replicated columns into capacitated columns
+    must return the same OPT as the dense matrix — homogeneous and
+    heterogeneous capacity shares, sparse overlap vectors."""
+    rng = np.random.default_rng(seed)
+    w = int(rng.integers(3, 8))
+    n = int(rng.integers(4, 40))
+    reqs = []
+    for i in range(n):
+        ov = np.zeros(w)
+        warm = rng.integers(0, w, size=rng.integers(0, 3))
+        ov[warm] = rng.integers(1, 9, size=warm.shape) / 8.0
+        reqs.append(_req(i, 1.0, workers=w, overlap=ov.tolist()))
+    caps = () if seed % 2 == 0 else tuple(
+        float(c) for c in rng.integers(0, 4, size=w) * 8.0)
+    for capacity in (2, 64):
+        kw = dict(num_workers=w, capacity=capacity, capacities=caps)
+        dense = PoATracker(dedup=False, **kw).opt_cost(reqs)
+        deduped = PoATracker(dedup=True, **kw).opt_cost(reqs)
+        assert deduped == pytest.approx(dense, rel=1e-12)

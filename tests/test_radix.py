@@ -93,6 +93,60 @@ def test_clear_worker():
     assert ix.overlap_scores(toks(0, 64), [0]) == [0.0]
 
 
+def test_clear_worker_deep_chain_iterative():
+    """Regression: ``clear_worker`` recursed node-per-block, so a Game 1
+    role flip after indexing a ≥16k-token prompt (≥1000 blocks) raised
+    RecursionError."""
+    ix = KvIndexer()
+    n_blocks = 1200
+    tokens = list(range(n_blocks * BLOCK_SIZE))
+    ix.insert(0, tokens)
+    assert ix.num_blocks(0) == n_blocks
+    ix.clear_worker(0)                   # must not hit the recursion limit
+    assert ix.num_blocks(0) == 0
+    assert ix.overlap_scores(tokens, [0]) == [0.0]
+
+
+def test_empty_nodes_and_hash_map_pruned():
+    """Memory boundedness: invalidation prunes claim-free nodes, and the
+    ``_node_by_hash`` lookup table shrinks with the tree instead of
+    accumulating every hash ever inserted."""
+    ix = KvIndexer()
+    ix.insert(0, toks(0, 64))
+    ix.insert(1, toks(0, 64))
+    ix.insert(0, toks(1000, 64))
+    assert len(ix._node_by_hash) == 8
+    ix.clear_worker(0)
+    # worker 1 still claims the shared chain; worker 0's private chain is
+    # fully reclaimed
+    assert len(ix._node_by_hash) == 4
+    assert ix.overlap_scores(toks(0, 64), [0, 1]) == [0.0, 1.0]
+    ix.remove_worker_blocks(1, toks(0, 64))
+    assert len(ix._node_by_hash) == 0
+    assert not ix.root.children
+
+
+def test_aggregated_matches_legacy_walk():
+    """The single-walk scoring must be value-identical to the per-worker
+    walk across partial overlaps, TTL staleness and invalidation."""
+    def build(aggregated):
+        ix = KvIndexer(ttl=2.0, aggregated=aggregated)
+        ix.insert(0, toks(0, 64), now=0.0)
+        ix.insert(1, toks(0, 32) + toks(7000, 32), now=1.5)
+        ix.insert(2, toks(500, 64), now=2.0)
+        ix.insert(3, toks(0, 16), now=3.4)
+        ix.remove_worker_block(0, block_hashes(toks(0, 64))[2])
+        return ix
+    queries = [toks(0, 64), toks(0, 32) + toks(7000, 32), toks(500, 64),
+               toks(9999, 64), toks(0, 16), []]
+    workers = [3, 0, 1, 2, 17]           # order-independent, unknown ok
+    for now in (0.0, 1.6, 3.0, 3.5, 9.0):
+        agg, legacy = build(True), build(False)
+        for q in queries:
+            assert agg.overlap_scores(q, workers, now=now) == \
+                legacy.overlap_scores(q, workers, now=now)
+
+
 def test_matched_blocks_monotone_under_insert():
     ix = KvIndexer()
     ix.insert(0, toks(0, 32))

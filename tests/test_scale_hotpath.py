@@ -1,0 +1,145 @@
+"""Large-pool hot path: aggregated-walk bit-exactness + scale scenarios.
+
+The aggregated single-walk overlap scoring, the vectorized τ=0 argmin and
+the column-deduplicated frozen OPT are *performance* rewrites: every named
+scenario must produce request-level identical results with the fast paths
+enabled (the default) and disabled (the legacy flags).  That pin is what
+lets the rest of the suite keep trusting the calibrated numbers.
+"""
+import json
+import math
+
+import pytest
+
+from repro.serving.scenarios import build_simulator, get_scenario, list_scenarios
+
+# every scenario that predates the scale family rides the legacy pin; the
+# scale scenarios join the comparison through the fast variant of scale-64
+# (64 workers exercises the vectorized router path the small pools skip)
+PRE_EXISTING = [n for n in list_scenarios() if not n.startswith("scale-")]
+SCALE = [n for n in list_scenarios() if n.startswith("scale-")]
+
+
+def _run(name, legacy):
+    sim = build_simulator(name, seed=0, fast=True)
+    if legacy:
+        # the OPT column dedup is pinned separately (it is equal to the
+        # dense matrix only up to float summation order on heterogeneous
+        # pools — see test_scenario_poa_dedup_matches_dense); the strict
+        # request/poll pin covers the overlap walk and the argmin path
+        sim.router.indexer.aggregated = False
+        sim.router.vectorized = False
+    return sim.run()
+
+
+def _request_view(res):
+    return [(r.rid, r.decode_worker, r.submit_t, r.prefill_end, r.finish_t,
+             r.overlap, r.overlaps_all, r.onboard_frac, r.onboard_latency)
+            for r in res.completed]
+
+
+def _poll_view(res):
+    # json round-trip: NaN PoA values compare equal as the literal "NaN"
+    return json.dumps(res.poll_log)
+
+
+@pytest.mark.parametrize("name", PRE_EXISTING + ["scale-64"])
+def test_fast_paths_bit_exact_with_legacy(name):
+    fast = _run(name, legacy=False)
+    slow = _run(name, legacy=True)
+    assert _request_view(fast) == _request_view(slow)
+    assert _poll_view(fast) == _poll_view(slow)
+
+
+@pytest.mark.parametrize("name", ["cache-pressure-hetero", "70b-1p2d-ramp",
+                                  "hetero-decode-mixed"])
+def test_scenario_poa_dedup_matches_dense(name):
+    """End-to-end: the deduped OPT reproduces every dense-path PoA sample
+    to float-summation-order precision (homogeneous pools exactly)."""
+    a = build_simulator(name, seed=0, fast=True)
+    b = build_simulator(name, seed=0, fast=True)
+    b.poa.dedup = False
+    ra, rb = a.run(), b.run()
+    assert [(r.rid, r.decode_worker) for r in ra.completed] == \
+        [(r.rid, r.decode_worker) for r in rb.completed]
+    for pa, pb in zip(ra.poll_log, rb.poll_log):
+        if math.isnan(pa["poa"]):
+            assert math.isnan(pb["poa"])
+        else:
+            assert pa["poa"] == pytest.approx(pb["poa"], rel=1e-12)
+
+
+def test_registry_includes_scale_family():
+    assert len(SCALE) >= 3
+    sizes = set()
+    for n in SCALE:
+        sc = get_scenario(n, fast=True)
+        sizes.add(sc.cluster.num_decode)
+        assert sc.workload.mode == "open"
+        assert sc.workload.num_templates > 5        # Zipf-skewed wide mix
+        assert sc.cluster.num_prefill >= 2          # pooled prefill
+        full = get_scenario(n)
+        assert full.workload.arrival.rate * full.workload.duration_s == \
+            pytest.approx(100_000)
+    assert {64, 128, 256} <= sizes
+    hetero = [n for n in SCALE
+              if get_scenario(n, fast=True).cluster.decode_workers]
+    assert hetero, "scale family must include a heterogeneous pool"
+
+
+def test_scale_scenario_uses_vectorized_router():
+    sim = build_simulator("scale-64", seed=0, fast=True)
+    assert len(sim.router.workers) >= sim.router.VECTORIZE_MIN_WORKERS
+    assert sim.router.vectorized and sim.router.indexer.aggregated
+    res = sim.run()
+    assert len(res.completed) > 0
+    # lean mode dropped the per-request O(workers) vectors after PoA
+    # accounting, but the PoA window kept its own copies
+    assert all(r.overlaps_all == () for r in res.completed)
+    assert all(len(c.overlap) == sim.cluster.num_decode
+               for c in sim.poa._window)
+
+
+def test_lean_mode_does_not_change_results():
+    a = build_simulator("scale-64", seed=3, fast=True, num_requests=400,
+                        lean_completed=False)
+    b = build_simulator("scale-64", seed=3, fast=True, num_requests=400,
+                        lean_completed=True)
+    ra, rb = a.run(), b.run()
+    assert [(r.rid, r.decode_worker, r.finish_t) for r in ra.completed] == \
+        [(r.rid, r.decode_worker, r.finish_t) for r in rb.completed]
+    assert _poll_view(ra) == _poll_view(rb)
+    assert any(r.overlaps_all != () for r in ra.completed)
+
+
+def test_router_load_cache_tracks_direct_state_writes():
+    """The vectorized router caches a dense load vector; writing a
+    worker's load/health directly (the simulator's metric sync does, and
+    so do tests) must invalidate it."""
+    from repro.core.router import KvPushRouter
+    r = KvPushRouter(32)
+    toks = list(range(64))
+    w0, _, _ = r.best_worker(toks)
+    assert w0 == 0
+    for w in range(16):
+        r.workers[w].active_blocks = 50          # direct write, no API
+    w1, _, _ = r.best_worker(toks)
+    assert w1 == 16
+    r.workers[16].healthy = False
+    w2, _, _ = r.best_worker(toks)
+    assert w2 == 17
+    r.workers[16].healthy = True
+    assert r.best_worker(toks)[0] == 16
+
+
+def test_scale_fast_smoke_all_sizes():
+    """Every scale scenario must complete its fast variant with sane
+    bookkeeping at pool sizes of 64-256."""
+    for name in SCALE:
+        sim = build_simulator(name, seed=0, fast=True)
+        res = sim.run()
+        assert sim.in_flight == 0
+        assert len(res.completed) > 1000
+        for p in res.poll_log:
+            if p["poa_n"] >= 0.8 * sim.poa.window_count:
+                assert math.isfinite(p["poa"]) and p["poa"] > 0.0
