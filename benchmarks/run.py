@@ -57,8 +57,8 @@ def main() -> None:
     if args.smoke:
         hold, iters = 12.0, 1
 
-    from benchmarks import (baselines_static_routing, bench_kernels,
-                            bench_router, bench_scale,
+    from benchmarks import (baselines_static_routing, bench_backend_parity,
+                            bench_kernels, bench_router, bench_scale,
                             exp2_saturation_detection,
                             fig5_poa_curves, game1_repartition,
                             prop5_g1_sweep, table4_equilibrium,
@@ -81,6 +81,8 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "router": bench_router.run,
         "scale": lambda: bench_scale.run(smoke=smoke or args.fast),
+        "backend_parity": lambda: bench_backend_parity.run(
+            smoke=smoke or args.fast),
         "scenarios": _scenario_sweep,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -34,7 +34,13 @@ def main():
     print(f"\ncompleted {len(done)} requests:")
     for r in done:
         print(f"  {r.request_id}: worker={r.worker} "
-              f"ttft={r.ttft*1000:7.1f}ms tokens={r.output}")
+              f"ttft={r.ttft*1000:7.1f}ms "
+              f"kv_moved={r.transfer_blocks}blk tokens={r.output}")
+
+    st = cluster.prefill.stats
+    print(f"\nprefix cache: {st.reused_blocks}/{st.total_blocks} blocks "
+          f"resumed, {st.computed_tokens}/{st.total_tokens} prompt tokens "
+          f"actually computed (cache-warm routing skips real compute)")
     print("\ngame-theoretic metrics (Prometheus exposition):")
     print(cluster.metrics.export_text())
 

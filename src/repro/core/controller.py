@@ -12,6 +12,12 @@ and applies them per-request through the router's
 metrics (game_poa, game_saturation_state, game_router_temperature,
 game_routing_cost) and supports the zero-downtime dual-frontend variant
 (two pre-configured routers; the workload switches target on detection).
+
+:class:`AdaptiveRouter` is the standalone Algorithm-1 wrapper; the serving
+stacks route through :class:`repro.serving.control_plane.ControlPlane`,
+which folds the same regime gating + metric exports into the shared
+backend-agnostic runtime (and adds baseline-policy overlap re-scoring and
+decision logging).
 """
 from __future__ import annotations
 
@@ -30,6 +36,27 @@ REGIME_PARAMS: Dict[Regime, KvRouterConfig] = {
     # Conjectural (paper Table 2 §): interpolated, never fired in Exp. 3.
     Regime.SATURATED: KvRouterConfig(temperature=0.8, overlap_weight=0.1),
 }
+
+
+def export_game_metrics(metrics: MetricsRegistry, *, regime: Regime,
+                        config: KvRouterConfig, decision_s: float,
+                        now: float,
+                        poa_tracker: Optional[PoATracker] = None) -> None:
+    """The paper's Algorithm-1 Prometheus exports, shared by
+    :class:`AdaptiveRouter` and the serving ControlPlane so both runtimes
+    publish identical signals."""
+    if poa_tracker is not None:
+        poa = poa_tracker.current_poa(now)
+        if poa == poa:  # not NaN
+            metrics.gauge("game_poa", "estimated Price of Anarchy").set(poa)
+    metrics.gauge("game_saturation_state",
+                  "0=below 1=transition 2=saturated").set(int(regime))
+    metrics.gauge("game_router_temperature", "active tau"
+                  ).set(config.temperature)
+    metrics.gauge("game_overlap_weight", "active omega"
+                  ).set(config.overlap_weight)
+    metrics.histogram("game_routing_cost", "router decision latency (s)",
+                      window_s=60.0).observe(decision_s, now)
 
 
 def violation_rates(metrics: MetricsRegistry, ttft_slo: float, itl_slo: float,
@@ -53,9 +80,14 @@ class AdaptiveRouter:
     adaptive: bool = True                    # False ⇒ static baseline
     static_config: KvRouterConfig = field(default_factory=KvRouterConfig)
 
-    def route(self, tokens: Sequence[int], now: Optional[float] = None
-              ) -> Tuple[int, float]:
-        """Returns (worker_id, overlap) and exports the game metrics."""
+    def route(self, tokens: Sequence[int], now: Optional[float] = None,
+              hashes: Optional[Sequence[int]] = None) -> Tuple[int, float]:
+        """Returns (worker_id, overlap) and exports the game metrics.
+
+        ``hashes`` is the per-request block-hash memo: callers that
+        already chained the prompt's block hashes (serving backends do,
+        once per request) pass them through so the router/indexer do not
+        rehash the same tokens per decision."""
         now = time.monotonic() if now is None else now
         if self.adaptive:
             cfg = self.regime_params[self.detector.regime]
@@ -66,19 +98,11 @@ class AdaptiveRouter:
         # freshness against it, and defaulting to t=0 meant cache-claim
         # expiry never fired through the adaptive controller.
         worker, overlap, _ = self.router.best_worker(
-            tokens, router_config_override=cfg, now=now)
+            tokens, router_config_override=cfg, now=now, hashes=hashes)
         dt = time.perf_counter() - t0
-        g = self.metrics
-        if self.poa_tracker is not None:
-            poa = self.poa_tracker.current_poa(now)
-            if poa == poa:  # not NaN
-                g.gauge("game_poa", "estimated Price of Anarchy").set(poa)
-        g.gauge("game_saturation_state", "0=below 1=transition 2=saturated"
-                ).set(int(self.detector.regime))
-        g.gauge("game_router_temperature", "active tau").set(cfg.temperature)
-        g.gauge("game_overlap_weight", "active omega").set(cfg.overlap_weight)
-        g.histogram("game_routing_cost", "router decision latency (s)",
-                    window_s=60.0).observe(dt, now)
+        export_game_metrics(self.metrics, regime=self.detector.regime,
+                            config=cfg, decision_s=dt, now=now,
+                            poa_tracker=self.poa_tracker)
         return worker, overlap
 
     def poll(self, ttft_p99: float, now: float) -> Regime:

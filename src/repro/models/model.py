@@ -330,6 +330,44 @@ class Model:
                             params["unembed"].astype(L.COMPUTE_DTYPE))
         return logits[:, 0].astype(jnp.float32), new_caches
 
+    @property
+    def supports_prefill_resume(self) -> bool:
+        """Prefix-resumable prompt passes need every mixer's sequence state
+        to live in the KV cache: attention attends over the cache with a
+        positional causal mask, so writing the suffix at ``start`` and
+        masking does the right thing; SSM/recurrent mixers (mamba/xLSTM)
+        recompute their state from the visible window during a multi-token
+        pass, so a resumed window would silently drop the prefix state."""
+        return (all(d.mixer == "attn" and not d.cross for d in self.descs)
+                and self.cfg.family not in ("encdec", "vlm"))
+
+    def prefill_resume(self, params, caches, tokens, start):
+        """Continue a prompt pass from position ``start``.
+
+        ``caches`` must hold valid K/V for positions < ``start`` (from an
+        earlier :meth:`prefill` of a prompt sharing that prefix); ``tokens``
+        is the (B, S_suffix) suffix starting at ``start``.  The suffix K/V
+        is written at ``start``..``start+S_suffix-1``, overwriting whatever
+        the donor prompt had there; stale donor positions at or beyond the
+        new total length stay masked (kv_pos ≤ q_pos never reaches them),
+        so the pass is exact — attention-only models, see
+        :attr:`supports_prefill_resume`.  Returns (last_logits (B,V),
+        caches), like :meth:`prefill`."""
+        assert self.supports_prefill_resume, self.cfg.name
+        cfg = self.cfg
+        x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+        x = shard(x, "batch", "seq", "act_embed")
+        s = x.shape[1]
+        start = jnp.asarray(start, jnp.int32)
+        positions = jnp.arange(s, dtype=jnp.int32) + start
+        x, new_caches, _ = self._run_stack(
+            params["stack"], x, caches=caches, positions=positions,
+            write_index=start, enc_out=None)
+        x = L.rmsnorm(params["final_norm"], x[:, -1:, :], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["unembed"].astype(L.COMPUTE_DTYPE))
+        return logits[:, 0].astype(jnp.float32), new_caches
+
     def _fill_cross_cache(self, params, caches, enc_out):
         def fill(pp, pc):
             out = dict(pc)

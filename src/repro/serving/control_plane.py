@@ -1,0 +1,199 @@
+"""Shared serving control plane — one runtime driving both backends.
+
+The paper's mechanisms (Smart Router Eq. 1/2 + KvIndexer radix tree,
+saturation detector Eq. 10/11, Table 2 adaptive regime params +
+dual-frontend switch, Planner, PoA tracker Eq. 12, metrics registry) are
+backend-agnostic: they consume routing-time token/hash streams and
+telemetry, not simulated or real compute.  :class:`ControlPlane` owns that
+wiring once, and two *backends* drive it:
+
+* the **analytic backend** — :class:`repro.serving.simulator.Simulator`,
+  the event-driven latency-model cluster (all calibrated experiments);
+* the **engine backend** — :class:`repro.serving.disagg.DisaggregatedCluster`
+  over real jitted-JAX :class:`~repro.serving.engine.PrefillEngine` /
+  :class:`~repro.serving.engine.DecodeEngine` workers, where a cache-warm
+  routing decision actually skips prefill recomputation.
+
+Both backends route through :meth:`select_worker`, so a routing decision is
+computed by the *same* code path given the same (tokens, hashes, indexer
+state, load view) — that is what makes backend parity a testable property
+(``tests/test_backend_parity.py``, ``benchmarks/bench_backend_parity.py``).
+
+``decision_log`` (opt-in) records every routing decision for parity
+comparison; it is off by default so large analytic runs carry no extra
+per-request state.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, Tuple
+
+from repro.core.controller import (REGIME_PARAMS, DualFrontend,
+                                   export_game_metrics)
+from repro.core.metrics import MetricsRegistry
+from repro.core.planner import Planner, PlannerConfig
+from repro.core.poa import PoATracker
+from repro.core.router import (KvPushRouter, KvRouterConfig, PowerOfTwoRouter,
+                               RandomRouter, RoundRobinRouter)
+from repro.core.saturation import DetectorConfig, Regime, SaturationDetector
+
+
+class RoutingDecision(NamedTuple):
+    """One logged routing decision (parity comparisons key on these)."""
+    rid: object            # backend request id (int rid / str request_id)
+    worker: int
+    overlap: float
+    now: float
+
+
+class ControlPlane:
+    """Router + indexer + detector + adaptive params + Planner + PoA +
+    metrics, wired once and shared by the analytic and engine backends."""
+
+    def __init__(self, num_workers: int, *,
+                 router_config: Optional[KvRouterConfig] = None,
+                 routing_policy: str = "kv",    # kv|round_robin|random|p2c
+                 seed: int = 0,
+                 adaptive: bool = False,
+                 detector_config: Optional[DetectorConfig] = None,
+                 regime_params: Optional[Dict] = None,
+                 cache_ttl: Optional[float] = None,
+                 capacities: Optional[Mapping[int, float]] = None,
+                 poa_num_workers: Optional[int] = None,
+                 poa_window_s: float = 30.0,
+                 poa_window_count: Optional[int] = None,
+                 poa_capacities: Sequence[float] = (),
+                 planner_config: Optional[PlannerConfig] = None,
+                 num_prefill: int = 0,
+                 log_decisions: bool = False):
+        self.router = KvPushRouter(num_workers,
+                                   router_config or KvRouterConfig(),
+                                   seed=seed)
+        if cache_ttl is not None:
+            self.router.indexer.ttl = cache_ttl
+        if capacities:
+            for wid, cap in capacities.items():
+                self.router.set_capacity(wid, cap)
+        # Baselines share the router's worker table so health changes
+        # propagate to every policy.
+        self.routing_policy = routing_policy
+        if routing_policy == "round_robin":
+            self.policy = RoundRobinRouter(self.router)
+        elif routing_policy == "random":
+            self.policy = RandomRouter(self.router, seed)
+        elif routing_policy == "p2c":
+            self.policy = PowerOfTwoRouter(self.router, seed)
+        else:
+            self.policy = self.router
+
+        self.adaptive = adaptive
+        self.detector = SaturationDetector(detector_config or DetectorConfig())
+        self.dual = DualFrontend()
+        self.regime_params = dict(regime_params or REGIME_PARAMS)
+        self.metrics = MetricsRegistry()
+        self.switch_time: Optional[float] = None
+
+        # Game 1: the Planner joins the control plane when configured.
+        self.planner: Optional[Planner] = None
+        self.planner_config: Optional[PlannerConfig] = None
+        if planner_config is not None:
+            self.planner_config = replace(
+                planner_config, total_workers=num_workers + num_prefill)
+            self.planner = Planner(config=self.planner_config,
+                                   prefill_workers=num_prefill,
+                                   decode_workers=num_workers)
+
+        poa_kw = dict(num_workers=poa_num_workers or num_workers,
+                      window_s=poa_window_s, capacities=tuple(poa_capacities))
+        if poa_window_count is not None:
+            poa_kw["window_count"] = poa_window_count
+        self.poa = PoATracker(**poa_kw)
+
+        self.log_decisions = log_decisions
+        self.decision_log: List[RoutingDecision] = []
+        self._last_config: KvRouterConfig = self.router.config
+
+    # ------------------------------------------------------------ params ----
+
+    def active_router_config(self, now: float) -> KvRouterConfig:
+        """Table 2 regime-gated (τ, ω) override (plus the §6.4 dual-frontend
+        switch bookkeeping); static config when not adaptive."""
+        if not self.adaptive:
+            return self.router.config
+        self.dual.on_regime(self.detector.regime, now)
+        if self.dual.active_port == 8001 and self.switch_time is None:
+            self.switch_time = self.dual.switch_time
+        return (self.regime_params.get(self.detector.regime)
+                or self.router.config)
+
+    # ----------------------------------------------------------- routing ----
+
+    def select_worker(self, tokens: Sequence[int], *,
+                      hashes: Optional[Sequence[int]] = None,
+                      now: float = 0.0,
+                      live_ids: Optional[Sequence[int]] = None,
+                      rid: object = None, record: bool = True
+                      ) -> Tuple[int, float, List[float], List[int]]:
+        """One routing decision through the active policy.
+
+        Returns ``(worker, overlap, overlaps, ids)`` where ``overlaps`` is
+        positionally aligned with ``ids``.  Baseline policies (round-robin /
+        random / p2c) report no overlap themselves, so their overlap vector
+        is re-scored from the indexer over ``live_ids`` (the backend's live
+        decode set) — the counterfactual the PoA tracker prices.
+
+        ``record=False`` keeps the decision out of ``decision_log`` — for
+        callers that may abandon the route (engine backpressure retries)
+        and log only the placement that actually happened via
+        :meth:`log_decision`.
+        """
+        cfg = self._last_config = self.active_router_config(now)
+        worker, overlap, overlaps = self.policy.best_worker(
+            tokens, router_config_override=cfg, now=now, hashes=hashes)
+        if self.policy is not self.router:
+            ids = (list(live_ids) if live_ids is not None
+                   else self.router.healthy_ids())
+            overlaps = self.router.indexer.overlap_scores(
+                tokens, ids, now, hashes=hashes)
+            overlap = overlaps[ids.index(worker)]
+        else:
+            ids = self.router.healthy_ids()
+        if record:
+            self.log_decision(rid, worker, overlap, now)
+        return worker, overlap, overlaps, ids
+
+    def log_decision(self, rid: object, worker: int, overlap: float,
+                     now: float) -> None:
+        if self.log_decisions:
+            self.decision_log.append(
+                RoutingDecision(rid, worker, overlap, now))
+
+    def route(self, tokens: Sequence[int], *,
+              hashes: Optional[Sequence[int]] = None,
+              now: float = 0.0,
+              live_ids: Optional[Sequence[int]] = None,
+              rid: object = None, record: bool = True
+              ) -> Tuple[int, float, List[float], List[int]]:
+        """Engine-path routing: :meth:`select_worker` plus the Algorithm 1
+        Prometheus exports (game_poa, game_saturation_state,
+        game_router_temperature, game_overlap_weight, game_routing_cost)."""
+        t0 = time.perf_counter()
+        worker, overlap, overlaps, ids = self.select_worker(
+            tokens, hashes=hashes, now=now, live_ids=live_ids, rid=rid,
+            record=record)
+        dt = time.perf_counter() - t0
+        export_game_metrics(self.metrics, regime=self.detector.regime,
+                            config=self._last_config, decision_s=dt,
+                            now=now, poa_tracker=self.poa)
+        return worker, overlap, overlaps, ids
+
+    # --------------------------------------------------------- telemetry ----
+
+    def observe(self, ttft_p99: float, now: float) -> Regime:
+        """Feed one polled TTFT P99 sample to the saturation detector."""
+        return self.detector.observe(ttft_p99, now)
+
+    def regime_transitions(self) -> List[Tuple[float, int, int]]:
+        """(t, from, to) regime transitions — the parity observable."""
+        return list(self.detector.transitions)

@@ -1,10 +1,27 @@
-"""End-to-end disaggregated cluster on real (reduced) models.
+"""End-to-end disaggregated cluster on real (reduced) models — the
+**engine backend** of the shared :class:`~repro.serving.control_plane.ControlPlane`.
 
-One prefill engine + N decode engines, glued by the paper's mechanisms:
-Smart Router (Eq. 1/2) with KvIndexer overlap, adaptive controller
-(saturation detector + Table 2 regime params), PoA tracker, and per-request
-metrics.  This is the production pattern at test scale: the same code path
-drives TPU submeshes when the engines are built on disjoint device sets.
+One prefill engine + N decode engines, glued by the same control plane the
+analytic simulator runs on: Smart Router (Eq. 1/2) with KvIndexer overlap,
+adaptive controller (saturation detector + Table 2 regime params), PoA
+tracker, and per-request metrics.  This is the production pattern at test
+scale: the same code path drives TPU submeshes when the engines are built
+on disjoint device sets.
+
+What makes this backend *real* rather than modeled:
+
+* the prefill engine holds a block-granular prefix cache keyed by the same
+  chained ``block_hashes`` the router scores overlap with, so a cache-warm
+  routing decision resumes prefill from the matched block boundary and
+  skips actual jitted compute (cold requests pay the full pass);
+* the prefill→decode ``transfer()`` hop is charged per **non-resident**
+  block on the chosen decode worker (``kv_transfer_per_block`` seconds per
+  block, added to the recorded TTFT/latency): on CPU the hop is an
+  in-process copy, and the per-block charge reintroduces the KV-movement
+  cost NetKV shows dominates decode-instance selection;
+* per-token inter-token latencies are observed into the metrics registry,
+  so ``violation_rates``' ITL side and the Planner's v_ITL signal are
+  non-degenerate on real engines.
 """
 from __future__ import annotations
 
@@ -14,11 +31,12 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.controller import AdaptiveRouter
-from repro.core.poa import CompletedRequest, PoATracker
-from repro.core.router import KvPushRouter, KvRouterConfig
-from repro.core.saturation import DetectorConfig, SaturationDetector
+from repro.core.poa import CompletedRequest
+from repro.core.radix import block_hashes
+from repro.core.router import KvRouterConfig
+from repro.core.saturation import DetectorConfig
 from repro.models.model import Model
+from repro.serving.control_plane import ControlPlane
 from repro.serving.engine import DecodeEngine, PrefillEngine
 
 
@@ -30,36 +48,65 @@ class ServeRequest:
     extras: Optional[dict] = None
     submit_t: float = 0.0
     first_token_t: float = 0.0
+    last_token_t: float = 0.0
     finish_t: float = 0.0
     output: List[int] = field(default_factory=list)
     worker: int = -1
+    overlap: float = 0.0
     overlaps: Tuple[float, ...] = ()
+    hashes: Tuple[int, ...] = ()
+    transfer_blocks: int = 0          # non-resident blocks the hop moved
+    transfer_charge: float = 0.0      # seconds charged for that movement
 
     @property
     def ttft(self) -> float:
+        """Wall-clock time to first token (compute only)."""
         return self.first_token_t - self.submit_t
+
+    @property
+    def charged_ttft(self) -> float:
+        """TTFT including the per-block KV-transfer charge — what the
+        metrics registry and PoA tracker observe."""
+        return self.ttft + self.transfer_charge
 
 
 class DisaggregatedCluster:
+    """Engine backend: real jitted engines driven by the shared control
+    plane.  ``control`` may be injected (scenario runners do, to share
+    decision logging); otherwise one is built from the kwargs."""
+
     def __init__(self, model: Model, params, *, num_decode: int = 2,
                  slots_per_worker: int = 4, max_len: int = 256,
                  adaptive: bool = True,
                  router_config: Optional[KvRouterConfig] = None,
-                 detector_config: Optional[DetectorConfig] = None):
+                 detector_config: Optional[DetectorConfig] = None,
+                 routing_policy: str = "kv",
+                 cache_ttl: Optional[float] = None,
+                 seed: int = 0,
+                 prefill_cache_entries: int = 16,
+                 kv_transfer_per_block: float = 0.0015,
+                 control: Optional[ControlPlane] = None):
         self.model = model
-        self.prefill = PrefillEngine(model, params, max_len)
+        self.prefill = PrefillEngine(model, params, max_len,
+                                     cache_entries=prefill_cache_entries)
         self.decoders = [DecodeEngine(model, params, slots_per_worker,
                                       max_len, worker_id=i)
                          for i in range(num_decode)]
-        router = KvPushRouter(num_decode, router_config or KvRouterConfig())
-        detector = SaturationDetector(
-            detector_config or DetectorConfig(theta1=0.5, theta2=5.0))
-        self.poa = PoATracker(num_workers=num_decode, window_s=60.0,
-                              window_count=64)
-        self.controller = AdaptiveRouter(
-            router=router, detector=detector, poa_tracker=self.poa,
-            adaptive=adaptive)
-        self.metrics = self.controller.metrics
+        self.control = control or ControlPlane(
+            num_decode,
+            router_config=router_config,
+            routing_policy=routing_policy,
+            seed=seed,
+            adaptive=adaptive,
+            detector_config=(detector_config
+                             or DetectorConfig(theta1=0.5, theta2=5.0)),
+            cache_ttl=cache_ttl,
+            poa_window_s=60.0, poa_window_count=64,
+            log_decisions=True)
+        self.router = self.control.router
+        self.poa = self.control.poa
+        self.metrics = self.control.metrics
+        self.kv_transfer_per_block = kv_transfer_per_block
         self.pending: List[ServeRequest] = []
         self.running: Dict[str, Tuple[ServeRequest, int, int]] = {}
         self.done: List[ServeRequest] = []
@@ -72,30 +119,48 @@ class DisaggregatedCluster:
 
     def submit(self, req: ServeRequest):
         req.submit_t = self._now()
+        if not req.hashes:
+            req.hashes = tuple(block_hashes(req.tokens))
         self.pending.append(req)
 
     def _try_schedule(self):
         still: List[ServeRequest] = []
         for req in self.pending:
-            worker, overlap = self.controller.route(req.tokens, now=self._now())
+            # ONE routing call: its overlap vector is the pre-insert view —
+            # the recorded PoA counterfactual must not self-credit the
+            # request's own about-to-be-inserted blocks (the old second
+            # ``best_worker`` call after ``on_schedule`` did exactly that).
+            # record=False: backpressure retries re-route every tick, and
+            # the decision_log must hold one entry per *placement*, not
+            # one per abandoned attempt.
+            now = self._now()
+            worker, overlap, overlaps, _ids = self.control.route(
+                req.tokens, hashes=req.hashes, now=now,
+                rid=req.request_id, record=False)
             dec = self.decoders[worker]
             slot = dec.free_slot()
             if slot is None:
                 still.append(req)  # backpressure: retry next tick
                 continue
-            logits, caches = self.prefill.prefill(req.tokens, req.extras)
+            self.control.log_decision(req.request_id, worker, overlap, now)
+            logits, caches = self.prefill.prefill(req.tokens, req.extras,
+                                                  hashes=req.hashes)
             first = int(np.argmax(logits))
-            dec.admit(slot, req.request_id, caches, first,
-                      prompt_len=len(req.tokens),
-                      max_new=req.max_new_tokens)
-            self.controller.router.on_schedule(worker, req.tokens,
-                                               now=self._now())
+            moved = dec.admit(slot, req.request_id, caches, first,
+                              prompt_len=len(req.tokens),
+                              max_new=req.max_new_tokens,
+                              hashes=req.hashes)
+            self.control.router.on_schedule(worker, req.tokens,
+                                            now=self._now(),
+                                            hashes=req.hashes)
             req.worker = worker
-            req.first_token_t = self._now()
-            req.output = [first]
-            _, _, overlaps = self.controller.router.best_worker(
-                req.tokens, now=self._now())
+            req.overlap = overlap
             req.overlaps = tuple(overlaps)
+            req.transfer_blocks = moved
+            req.transfer_charge = moved * self.kv_transfer_per_block
+            req.first_token_t = self._now()
+            req.last_token_t = req.first_token_t
+            req.output = [first]
             self.running[req.request_id] = (req, worker, slot)
         self.pending = still
 
@@ -106,24 +171,33 @@ class DisaggregatedCluster:
         completed = 0
         for dec in self.decoders:
             for rid, tok, done in dec.step():
-                req, worker, slot = self.running[rid]
+                req, worker, _slot = self.running[rid]
+                now = self._now()
                 req.output.append(tok)
+                # per-token ITL: every decode step contributes a sample, so
+                # the ITL histogram (and the Planner's v_ITL) is live on
+                # the engine path, not just TTFT
+                self.metrics.histogram("itl", window_s=300.0).observe(
+                    now - req.last_token_t, now)
+                req.last_token_t = now
                 if done:
-                    req.finish_t = self._now()
-                    dec.release(slot)
+                    # slot already released inside dec.step() (returned-slot
+                    # contract: done=True means re-admittable this tick)
+                    req.finish_t = now
                     del self.running[rid]
                     self.done.append(req)
-                    self.controller.router.on_complete(worker, req.tokens)
+                    self.control.router.on_complete(worker, req.tokens)
                     self.metrics.histogram("ttft", window_s=300.0).observe(
-                        req.ttft, self._now())
+                        req.charged_ttft, now)
                     self.poa.record(CompletedRequest(
                         request_id=rid, worker=worker,
-                        latency=req.finish_t - req.submit_t,
-                        overlap=req.overlaps, finish_time=self._now()))
+                        latency=(req.finish_t - req.submit_t
+                                 + req.transfer_charge),
+                        overlap=req.overlaps, finish_time=now))
                     completed += 1
         # controller telemetry poll (every tick at test scale)
         ttft_p99 = self.metrics.histogram("ttft", window_s=300.0).p99(self._now())
-        self.controller.poll(ttft_p99, self._now())
+        self.control.observe(ttft_p99, self._now())
         return completed
 
     def run_until_done(self, max_ticks: int = 10_000) -> List[ServeRequest]:

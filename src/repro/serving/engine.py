@@ -1,14 +1,30 @@
 """Real-model disaggregated serving engines (jitted JAX, CPU-testable).
 
 ``PrefillEngine`` runs the prompt pass and emits a per-request KV/state
-cache bundle; ``DecodeEngine`` holds a fixed-slot continuous batch whose
-per-slot lengths advance independently (ragged decode with masked cache
-writes).  ``transfer()`` moves a prefill cache bundle into a decode slot —
-on a real cluster this is a cross-mesh ``jax.device_put`` (the NIXL
-analogue); on CPU it degenerates to an in-process copy.
+cache bundle.  It keeps a **block-granular prefix cache** keyed by the same
+chained ``block_hashes`` the router/indexer use: when a new prompt shares a
+cached prefix (and the model supports resumable prefill — attention-only
+stacks), the prompt pass *resumes* from the matched block boundary instead
+of recomputing the prefix, so a cache-warm routing decision actually skips
+real jitted compute.  Per-call and cumulative stats (reused blocks,
+computed suffix tokens, estimated FLOPs, wall time) back the
+``benchmarks/bench_backend_parity.py`` warm-vs-cold measurement.
+
+``DecodeEngine`` holds a fixed-slot continuous batch whose per-slot lengths
+advance independently (ragged decode with masked cache writes).  Finished
+slots are released **inside** :meth:`DecodeEngine.step` — the returned-slot
+contract: a ``done=True`` tuple means the slot is already free and
+re-admittable in the same tick.  The engine also tracks which KV blocks are
+resident (admitted and not yet evicted by the bounded LRU), so the
+prefill→decode ``transfer()`` hop can be charged per *non-resident* block —
+on a real cluster that hop is a cross-mesh ``jax.device_put`` (the NIXL
+analogue); on CPU it degenerates to an in-process copy, so the per-block
+charge is what reintroduces the KV-movement cost the routing game is about.
 """
 from __future__ import annotations
 
+import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
@@ -16,24 +32,160 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.radix import BLOCK_SIZE, block_hashes
 from repro.models.model import Model
 
 
+@dataclass
+class PrefillStats:
+    """Cumulative prefix-cache accounting (one instance per engine)."""
+    requests: int = 0
+    total_blocks: int = 0        # full blocks across all prompts
+    reused_blocks: int = 0       # blocks resumed from the prefix cache
+    total_tokens: int = 0        # prompt tokens across all prompts
+    computed_tokens: int = 0     # suffix tokens actually run through compute
+    flops: float = 0.0           # ≈ 2·N_active·computed_tokens
+    wall_s: float = 0.0          # jitted prompt-pass wall time
+
+    def as_dict(self) -> dict:
+        return dict(requests=self.requests, total_blocks=self.total_blocks,
+                    reused_blocks=self.reused_blocks,
+                    total_tokens=self.total_tokens,
+                    computed_tokens=self.computed_tokens,
+                    flops=self.flops, wall_s=self.wall_s)
+
+
 class PrefillEngine:
-    def __init__(self, model: Model, params, max_len: int):
+    def __init__(self, model: Model, params, max_len: int,
+                 cache_entries: int = 16, block_size: int = BLOCK_SIZE):
         self.model = model
         self.params = params
         self.max_len = max_len
+        self.block_size = block_size
+        self.cache_entries = cache_entries
         self._prefill = jax.jit(
             lambda p, batch: model.prefill(p, batch, max_len=max_len))
+        # start is traced (one compile per suffix length, not per offset)
+        self._resume = jax.jit(model.prefill_resume)
+        # prefix cache: full hash chain of a completed prompt pass → its
+        # cache bundle (K/V valid for every position of that prompt).  A
+        # lookup matches the longest common *prefix* of chains — chained
+        # hashes commit to the whole prefix, so chain equality at depth m
+        # means token equality over the first m blocks.
+        self._cache: "OrderedDict[Tuple[int, ...], object]" = OrderedDict()
+        self.stats = PrefillStats()
+        # per-token FLOPs estimate: 2·N_active (inference forward pass)
+        self._flops_per_token = 2.0 * model.cfg.active_param_count()
 
-    def prefill(self, tokens: Sequence[int], extras: Optional[dict] = None):
-        """Single-request prompt pass → (last_logits (V,), cache bundle)."""
-        batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None, :]}
-        if extras:
-            batch.update({k: jnp.asarray(v)[None] for k, v in extras.items()})
-        logits, caches = self._prefill(self.params, batch)
-        return np.asarray(logits[0]), caches
+    # ------------------------------------------------------ prefix cache ----
+
+    def _best_match(self, hashes: Sequence[int]):
+        """One walk over the cache: ``(depth, entry)`` of the deepest
+        common-prefix chain (most recently used wins ties); the winner's
+        LRU position is refreshed.  Chained hashes commit to their whole
+        prefix, so chain equality at depth m means token equality over the
+        first m blocks — any entry matching m blocks is a valid K/V donor
+        for every resume point inside them."""
+        best, donor, key = 0, None, None
+        for chain in reversed(self._cache):   # most recent first
+            m = 0
+            for a, b in zip(chain, hashes):
+                if a != b:
+                    break
+                m += 1
+            if m > best:
+                best, donor, key = m, self._cache[chain], chain
+        if key is not None:
+            self._cache.move_to_end(key)
+        return best, donor
+
+    def _store(self, hashes: Sequence[int], caches) -> None:
+        if not hashes or self.cache_entries <= 0:
+            return
+        key = tuple(hashes)
+        self._cache[key] = caches
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_entries:
+            self._cache.popitem(last=False)
+
+    def clear_cache(self) -> None:
+        self._cache.clear()
+
+    def warmup(self, prompt_lengths: Sequence[int],
+               suffix_lengths: Sequence[int] = ()) -> None:
+        """Pre-compile the jitted prompt passes for the given prompt (and
+        resume-suffix) lengths, without touching the prefix cache or the
+        stats — so measured runs and the saturation detector never see
+        multi-second XLA compile walls as TTFT.
+
+        Resume compilation is keyed on the suffix length alone (cache
+        shapes are fixed at ``max_len`` and ``start`` is traced), so each
+        suffix compiles once against one donor instead of once per
+        (prompt, suffix) pair."""
+        lengths = sorted(set(int(x) for x in prompt_lengths))
+        caches = None
+        for n in lengths:
+            batch = {"tokens": jnp.zeros((1, n), jnp.int32)}
+            _, caches = self._prefill(self.params, batch)
+        if caches is None or not self.model.supports_prefill_resume:
+            return
+        n_max = lengths[-1]
+        for s in sorted(set(int(x) for x in suffix_lengths)):
+            if 0 < s < n_max:
+                self._resume(self.params, caches,
+                             jnp.zeros((1, s), jnp.int32),
+                             jnp.int32(n_max - s))
+
+    # ----------------------------------------------------------- prefill ----
+
+    def prefill(self, tokens: Sequence[int], extras: Optional[dict] = None,
+                hashes: Optional[Sequence[int]] = None):
+        """Single-request prompt pass → (last_logits (V,), cache bundle).
+
+        Resumes from the longest cached block prefix when possible; a miss
+        (or a model without resumable prefill, or multimodal ``extras``)
+        pays the full jitted pass.  Always recomputes at least the last
+        token so the returned logits are exact for *this* prompt."""
+        resumable = (self.model.supports_prefill_resume and not extras
+                     and self.cache_entries > 0)
+        if hashes is None and resumable:
+            hashes = block_hashes(tokens, self.block_size)
+        hashes = tuple(hashes or ())
+        start = 0
+        donor = None
+        if resumable and hashes:
+            m, donor = self._best_match(hashes)
+            # keep ≥1 suffix token so the pass emits this prompt's logits;
+            # the donor matched m full blocks, which covers every position
+            # below any start ≤ m·block_size (including a non-boundary
+            # start inside the donor's last matched block)
+            start = min(m * self.block_size, len(tokens) - 1)
+            if start <= 0:
+                donor = None
+        t0 = time.perf_counter()
+        if start > 0:
+            suffix = jnp.asarray(tokens[start:], jnp.int32)[None, :]
+            logits, caches = self._resume(self.params, donor, suffix,
+                                          jnp.int32(start))
+        else:
+            batch = {"tokens": jnp.asarray(tokens, jnp.int32)[None, :]}
+            if extras:
+                batch.update({k: jnp.asarray(v)[None]
+                              for k, v in extras.items()})
+            logits, caches = self._prefill(self.params, batch)
+        logits = np.asarray(logits[0])
+        wall = time.perf_counter() - t0
+        st = self.stats
+        st.requests += 1
+        st.total_blocks += len(hashes)
+        st.reused_blocks += start // self.block_size
+        st.total_tokens += len(tokens)
+        st.computed_tokens += len(tokens) - start
+        st.flops += self._flops_per_token * (len(tokens) - start)
+        st.wall_s += wall
+        if resumable:
+            self._store(hashes, caches)
+        return logits, caches
 
 
 @dataclass
@@ -49,7 +201,7 @@ class DecodeEngine:
     """Fixed-slot continuous batcher around the jitted ragged decode step."""
 
     def __init__(self, model: Model, params, num_slots: int, max_len: int,
-                 worker_id: int = 0):
+                 worker_id: int = 0, resident_blocks: int = 4096):
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -59,6 +211,13 @@ class DecodeEngine:
         self.caches = model.cache_init(num_slots, max_len)
         self.tokens = np.zeros((num_slots, 1), np.int32)
         self._decode = jax.jit(model.decode, donate_argnums=1)
+        # KV-block residency (the worker's G1 view): bounded LRU over the
+        # block hashes this worker has admitted.  The transfer() hop is
+        # charged only for blocks NOT in this set — a cache-warm routing
+        # decision ships less KV.
+        self.resident_cap = resident_blocks
+        self._resident: "OrderedDict[int, None]" = OrderedDict()
+        self.transferred_blocks = 0      # cumulative non-resident blocks
 
     # -------------------------------------------------------------- admit ---
 
@@ -68,9 +227,30 @@ class DecodeEngine:
                 return i
         return None
 
+    def _touch_blocks(self, hashes: Sequence[int]) -> int:
+        """Mark ``hashes`` resident (LRU refresh); returns the number of
+        blocks that were NOT already resident — the transfer() payload."""
+        new = 0
+        for h in hashes:
+            if h in self._resident:
+                self._resident.move_to_end(h)
+            else:
+                self._resident[h] = None
+                new += 1
+        while len(self._resident) > self.resident_cap:
+            self._resident.popitem(last=False)
+        return new
+
     def admit(self, slot: int, request_id: str, prefill_caches,
-              first_token: int, prompt_len: int, max_new: int):
-        """Transfer a prefill cache bundle into `slot` (the NIXL hop)."""
+              first_token: int, prompt_len: int, max_new: int,
+              hashes: Sequence[int] = ()) -> int:
+        """Transfer a prefill cache bundle into ``slot`` (the NIXL hop).
+
+        Returns the number of *non-resident* blocks the transfer had to
+        move — the per-block charge of the prefill→decode hop.  Blocks
+        already resident (an earlier request of the same template landed
+        here) ride for free; that asymmetry is the cache-affinity
+        externality on the real path."""
         self.caches = _insert_cache(self.caches, prefill_caches, slot,
                                     self.model)
         s = self.slots[slot]
@@ -80,6 +260,9 @@ class DecodeEngine:
         s.generated = [int(first_token)]
         s.max_new = max_new
         self.tokens[slot, 0] = first_token
+        moved = self._touch_blocks(hashes)
+        self.transferred_blocks += moved
+        return moved
 
     def release(self, slot: int):
         self.slots[slot] = Slot()
@@ -89,10 +272,21 @@ class DecodeEngine:
     def active_count(self) -> int:
         return sum(s.active for s in self.slots)
 
+    def warmup(self) -> None:
+        """Pre-compile the jitted decode step (slots all inactive; whatever
+        the pass writes is fully overwritten on the next ``admit``)."""
+        lengths = jnp.zeros((self.num_slots,), jnp.int32)
+        _, self.caches = self._decode(self.params, self.caches,
+                                      jnp.asarray(self.tokens), lengths)
+
     # --------------------------------------------------------------- step ---
 
     def step(self) -> List[Tuple[str, int, bool]]:
-        """One batched decode tick. Returns [(request_id, token, done)]."""
+        """One batched decode tick. Returns [(request_id, token, done)].
+
+        Returned-slot contract: when ``done`` is True the slot has already
+        been released inside this step — it is free for admission in the
+        same tick, and callers must NOT call :meth:`release` again."""
         if self.active_count == 0:
             return []
         lengths = jnp.asarray([s.length if s.active else 0
@@ -112,7 +306,7 @@ class DecodeEngine:
                     or s.length >= self.max_len - 1)
             out.append((s.request_id, tok, done))
             if done:
-                pass  # caller releases after collecting
+                self.release(i)   # slot is re-admittable this same tick
         return out
 
 

@@ -105,6 +105,13 @@ def list_scenarios() -> List[str]:
     return sorted(SCENARIOS)
 
 
+def parity_scenarios() -> List[str]:
+    """The backend-parity family — single source of truth for the parity
+    test suite and ``benchmarks/bench_backend_parity.py`` (a scenario added
+    to one must be covered by the other)."""
+    return [n for n in list_scenarios() if n.startswith("parity-")]
+
+
 def get_scenario(name: str, **overrides) -> Scenario:
     try:
         factory = SCENARIOS[name]
@@ -125,6 +132,37 @@ def build_simulator(name: str, seed: int = 0, **overrides) -> Simulator:
     sim_kw = {k: overrides.pop(k) for k in list(overrides)
               if k in sim_keys}
     return get_scenario(name, **overrides).build(seed=seed, **sim_kw)
+
+
+# Engine-runner knobs build_backend() routes to EngineScenarioRunner
+# (everything else is a factory knob or a DisaggregatedCluster kwarg).
+_ENGINE_KEYS = {"model_name", "num_requests", "input_tokens",
+                "output_tokens", "slots_per_worker", "serialize", "warmup",
+                "model", "params", "adaptive", "router_config",
+                "detector_config", "routing_policy", "cache_ttl",
+                "prefill_cache_entries", "kv_transfer_per_block"}
+
+
+def build_backend(name: str, backend: str = "analytic", seed: int = 0,
+                  **overrides):
+    """Instantiate a named scenario on either backend.
+
+    ``backend="analytic"`` returns the event-driven :class:`Simulator`
+    (identical to :func:`build_simulator`); ``backend="engine"`` returns an
+    :class:`~repro.serving.engine_backend.EngineScenarioRunner` that drives
+    the scenario's request stream through real jitted-JAX engines on a
+    reduced CPU-testable model.  Both route through the shared
+    :class:`~repro.serving.control_plane.ControlPlane`."""
+    if backend == "analytic":
+        return build_simulator(name, seed=seed, **overrides)
+    if backend == "engine":
+        from repro.serving.engine_backend import EngineScenarioRunner
+        engine_kw = {k: overrides.pop(k) for k in list(overrides)
+                     if k in _ENGINE_KEYS}
+        return EngineScenarioRunner(get_scenario(name, **overrides),
+                                    seed=seed, **engine_kw)
+    raise ValueError(f"unknown backend {backend!r}; "
+                     f"expected 'analytic' or 'engine'")
 
 
 def _reg(name: str, doc: str):
@@ -540,6 +578,92 @@ def _trace_replay(n: int = 120, horizon_s: float = 30.0,
         cluster=ClusterConfig.for_model("llama-3.1-70b", "1P/2D"),
         workload=WorkloadConfig.from_records(
             example_trace_records(n, horizon_s)),
+        sim_kwargs=kw)
+
+
+# Backend parity (analytic vs engine) ----------------------------------------
+#
+# Tiny trace scenarios crafted so a τ=0 routing decision is a pure function
+# of the indexer's insert history on BOTH backends: explicit template
+# sequences (no sampling), zero service jitter, a metrics interval longer
+# than the run (the analytic router's load view stays frozen at zero, like
+# the engine's between serialized requests) and a cache TTL longer than the
+# horizon.  Under that protocol the two backends must agree decision-for-
+# decision (tests/test_backend_parity.py) — any drift is a control-plane
+# coherence bug, not timing noise.
+
+def _parity_cluster(topo: str, decode_workers: Tuple[DecodeWorkerSpec, ...] = ()
+                    ) -> ClusterConfig:
+    base = ClusterConfig.for_model("llama-3.1-70b", topo)
+    return replace(base, service_sigma=0.0, metrics_interval=1000.0,
+                   cache_ttl=1000.0,
+                   decode_workers=decode_workers)
+
+
+def _parity_trace(templates, n: int, spacing: float = 0.45,
+                  input_tokens: int = 48, output_tokens: int = 16
+                  ) -> WorkloadConfig:
+    records = [{"t": round(i * spacing, 4),
+                "template": templates[i % len(templates)],
+                "input_tokens": input_tokens,
+                "output_tokens": output_tokens}
+               for i in range(n)]
+    return replace(WorkloadConfig.from_records(records), num_templates=12)
+
+
+@_reg("parity-2d-warm",
+      "1P/2D backend-parity trace, warm-heavy template cycle (0,1,0,2): "
+      "cache-affinity decisions must agree across backends")
+def _parity_2d_warm(n: int = 16, fast: bool = False,
+                    templates: Tuple[int, ...] = (0, 1, 0, 2),
+                    **kw) -> Scenario:
+    if fast:
+        n = 8
+    return Scenario(
+        name="", description="",
+        cluster=_parity_cluster("1P/2D"),
+        workload=_parity_trace(templates, n),
+        sim_kwargs=kw)
+
+
+@_reg("parity-3d-hetero",
+      "1P/3D mixed-generation backend-parity trace (cycle 0,1,2,0,1) — "
+      "capacity-normalized routing must agree across backends")
+def _parity_3d_hetero(n: int = 15, fast: bool = False, **kw) -> Scenario:
+    if fast:
+        n = 10
+    return Scenario(
+        name="", description="",
+        cluster=_parity_cluster("1P/3D", _mixed_pool()),
+        workload=_parity_trace((0, 1, 2, 0, 1), n),
+        sim_kwargs=kw)
+
+
+@_reg("parity-3d-rr",
+      "1P/3D backend-parity trace under round-robin routing: templates "
+      "spread across the pool, so per-worker overlap VECTORS (not just "
+      "the chosen worker) must agree across backends")
+def _parity_3d_rr(n: int = 15, fast: bool = False, **kw) -> Scenario:
+    if fast:
+        n = 9
+    kw.setdefault("routing_policy", "round_robin")
+    return Scenario(
+        name="", description="",
+        cluster=_parity_cluster("1P/3D"),
+        workload=_parity_trace((0, 1, 2, 0, 1), n),
+        sim_kwargs=kw)
+
+
+@_reg("parity-2d-cold",
+      "1P/2D backend-parity trace of all-distinct templates — the full-"
+      "miss path (zero overlap everywhere) must agree across backends")
+def _parity_2d_cold(n: int = 10, fast: bool = False, **kw) -> Scenario:
+    if fast:
+        n = 6
+    return Scenario(
+        name="", description="",
+        cluster=_parity_cluster("1P/2D"),
+        workload=_parity_trace(tuple(range(10)), n),
         sim_kwargs=kw)
 
 

@@ -51,24 +51,21 @@ import itertools
 import math
 import re
 from collections import deque
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 from typing import Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.controller import (REGIME_PARAMS, DualFrontend,
-                                   violation_rates)
+from repro.core.controller import violation_rates
 from repro.core.kvbm import KVBlockManager
-from repro.core.metrics import MetricsRegistry
-from repro.core.planner import Planner, PlannerConfig, ResponseModel
-from repro.core.poa import CompletedRequest, PoATracker
+from repro.core.planner import PlannerConfig, ResponseModel
+from repro.core.poa import CompletedRequest
 from repro.core.radix import block_hashes
-from repro.core.router import (KvPushRouter, KvRouterConfig, PowerOfTwoRouter,
-                               RandomRouter, RoundRobinRouter)
-from repro.core.saturation import DetectorConfig, SaturationDetector
-from repro.serving.workload import WorkloadConfig, template_tokens
-
-TEMPLATE_POPULARITY = (0.35, 0.25, 0.20, 0.12, 0.08)
+from repro.core.router import KvRouterConfig
+from repro.core.saturation import DetectorConfig
+from repro.serving.control_plane import ControlPlane
+from repro.serving.workload import (WorkloadConfig, template_mix,
+                                    template_tokens)
 
 PREFILL_ROLE = "prefill"
 DECODE_ROLE = "decode"
@@ -270,17 +267,10 @@ class Simulator:
         # dedicated stream for open-loop arrival sampling so closed-loop
         # runs stay byte-identical to the pre-scenario simulator
         self.arrival_rng = np.random.default_rng([seed, 0xA221])
-        # Template popularity: the legacy 5-template mix verbatim (identity
-        # path), or a Zipf-skewed extension when the workload asks for a
-        # wider template universe (cache-pressure scenarios grow the
-        # working set past G1 this way).
-        n_templates = workload.num_templates
-        if n_templates == len(TEMPLATE_POPULARITY):
-            self.template_probs = TEMPLATE_POPULARITY
-        else:
-            w = [1.0 / (i + 1) ** 0.9 for i in range(n_templates)]
-            tot = sum(w)
-            self.template_probs = tuple(x / tot for x in w)
+        # Template popularity: shared with the engine backend (see
+        # repro.serving.workload.template_mix) so both backends sample
+        # identical template streams from identical seeds.
+        self.template_probs = template_mix(workload.num_templates)
 
         # ---- unified worker-role pool: decode wids first (0..nd-1, the
         # legacy router universe), then the prefill pool (nd..nd+np-1).
@@ -294,42 +284,44 @@ class Simulator:
         self.decode_ids: List[int] = list(range(nd))
         self.prefill_ids: List[int] = list(range(nd, nd + npre))
 
-        self.router = KvPushRouter(nd, router_config or KvRouterConfig(),
-                                   seed=seed)
-        self.router.indexer.ttl = cluster.cache_ttl
-        for wid in self.decode_ids:
-            self.router.set_capacity(
-                wid, float(self.workers[wid].spec.decode_cap))
-        # Baselines share the router's worker table so health changes
-        # propagate to every policy.
-        if routing_policy == "round_robin":
-            self.policy = RoundRobinRouter(self.router)
-        elif routing_policy == "random":
-            self.policy = RandomRouter(self.router, seed)
-        elif routing_policy == "p2c":
-            self.policy = PowerOfTwoRouter(self.router, seed)
-        else:
-            self.policy = self.router
-
-        self.adaptive = adaptive
-        self.detector = SaturationDetector(
-            detector_config or DetectorConfig.for_model(cluster.name))
-        self.dual = DualFrontend()
-        self.regime_params = dict(regime_params or REGIME_PARAMS)
-        self.metrics = MetricsRegistry()
-
-        # ---- Game 1: the Planner as a third control-plane event.  When
-        # enabled, the PoA universe widens to the whole pool (prefill-role
+        # ---- shared control plane (router + indexer + detector + adaptive
+        # params + Planner + PoA + metrics).  Game 1: when a Planner is
+        # configured the PoA universe widens to the whole pool (prefill-role
         # slots carry zero capacity, contributing no counterfactual
-        # columns); when disabled the legacy decode-only universe keeps
-        # every pre-existing scenario bit-exact.
-        self.planner: Optional[Planner] = None
-        self.planner_config: Optional[PlannerConfig] = None
+        # columns); without one the legacy decode-only universe keeps every
+        # pre-existing scenario bit-exact.
         if planner_config is not None:
-            self.planner_config = replace(planner_config,
-                                          total_workers=nd + npre)
-            self.planner = Planner(config=self.planner_config,
-                                   prefill_workers=npre, decode_workers=nd)
+            self._poa_universe = list(range(nd + npre))
+        else:
+            self._poa_universe = list(range(nd))
+        self.control = ControlPlane(
+            nd,
+            router_config=router_config,
+            routing_policy=routing_policy,
+            seed=seed,
+            adaptive=adaptive,
+            detector_config=(detector_config
+                             or DetectorConfig.for_model(cluster.name)),
+            regime_params=regime_params,
+            cache_ttl=cluster.cache_ttl,
+            capacities={wid: float(self.workers[wid].spec.decode_cap)
+                        for wid in self.decode_ids},
+            poa_num_workers=len(self._poa_universe),
+            poa_window_s=30.0,
+            planner_config=planner_config,
+            num_prefill=npre)
+        cp = self.control
+        self.router = cp.router
+        self.policy = cp.policy
+        self.adaptive = cp.adaptive
+        self.detector = cp.detector
+        self.dual = cp.dual
+        self.regime_params = cp.regime_params
+        self.metrics = cp.metrics
+        self.planner = cp.planner
+        self.planner_config = cp.planner_config
+        self.poa = cp.poa
+        if self.planner is not None:
             # service-rate telemetry shares the Planner's measurement
             # window (histograms pin window_s at creation, so create them
             # here; without a Planner they default to the 30 s telemetry
@@ -340,13 +332,7 @@ class Simulator:
         self.role_flips: List[Tuple[float, int, str]] = []
         self._arrivals: Deque[float] = deque()
 
-        if self.planner is not None:
-            self._poa_universe = list(range(nd + npre))
-        else:
-            self._poa_universe = list(range(nd))
-        self.poa = PoATracker(num_workers=len(self._poa_universe),
-                              window_s=30.0,
-                              capacities=self._poa_capacities())
+        self.poa.capacities = self._poa_capacities()
 
         # Tier-coherent hierarchical cache: whenever KVBM demotes (or
         # frees) a block out of G1 HBM, the router's overlap claim for it
@@ -363,7 +349,6 @@ class Simulator:
         self.completed: List[SimRequest] = []
         self._rid = itertools.count()
         self.poll_log: List[dict] = []
-        self.switch_time: Optional[float] = None
 
     # ------------------------------------------------- pool projections -----
     #
@@ -483,19 +468,13 @@ class Simulator:
         per template, in fact) and threaded through every router/indexer
         call — the pre-memo hot path hashed the same prompt up to four
         times per routing decision."""
-        cfg = self._active_router_config()
         if not req.hashes:   # trace entries below one block still memoize
             req.hashes = tuple(block_hashes(req.tokens))
-        worker, overlap, overlaps = self.policy.best_worker(
-            req.tokens, router_config_override=cfg, now=self.now,
-            hashes=req.hashes)
-        if self.policy is not self.router:
-            ids = self._live_decode_ids()
-            overlaps = self.router.indexer.overlap_scores(
-                req.tokens, ids, self.now, hashes=req.hashes)
-            overlap = overlaps[ids.index(worker)]
-        else:
-            ids = self.router.healthy_ids()
+        live = (self._live_decode_ids()
+                if self.policy is not self.router else None)
+        worker, overlap, overlaps, ids = self.control.select_worker(
+            req.tokens, hashes=req.hashes, now=self.now, live_ids=live,
+            rid=req.rid)
         req.decode_worker = worker
         req.overlap = overlap
         req.overlaps_all = self._dense(ids, overlaps)
@@ -787,14 +766,10 @@ class Simulator:
 
     # ------------------------------------------------------- controller -----
 
-    def _active_router_config(self) -> KvRouterConfig:
-        if not self.adaptive:
-            return self.router.config
-        self.dual.on_regime(self.detector.regime, self.now)
-        if self.dual.active_port == 8001 and self.switch_time is None:
-            self.switch_time = self.dual.switch_time
-        return (self.regime_params.get(self.detector.regime)
-                or self.router.config)
+    @property
+    def switch_time(self) -> Optional[float]:
+        """Dual-frontend switch time (recorded by the control plane)."""
+        return self.control.switch_time
 
     def _on_poll(self):
         ttft_p99 = self.metrics.histogram("ttft", window_s=30.0).p99(self.now)

@@ -44,6 +44,26 @@ NUM_TEMPLATES = 5
 INPUT_TOKENS = 128
 OUTPUT_TOKENS = 256
 
+# The paper's short-chat template popularity (mildly skewed — what lets
+# cache-affinity herding concentrate load).  Shared by both backends so the
+# analytic simulator and the engine cluster sample identical template
+# streams from identical seeds.
+TEMPLATE_POPULARITY = (0.35, 0.25, 0.20, 0.12, 0.08)
+
+
+def template_mix(num_templates: int) -> Tuple[float, ...]:
+    """Template popularity distribution for a ``num_templates``-wide mix.
+
+    The legacy 5-template mix verbatim (identity path, keeps pre-scenario
+    runs bit-exact), or a Zipf(0.9) skew when the workload asks for a wider
+    template universe (cache-pressure scenarios grow the working set past
+    G1 this way)."""
+    if num_templates == len(TEMPLATE_POPULARITY):
+        return TEMPLATE_POPULARITY
+    w = [1.0 / (i + 1) ** 0.9 for i in range(num_templates)]
+    tot = sum(w)
+    return tuple(x / tot for x in w)
+
 
 def template_tokens(template_id: int, n_tokens: int = INPUT_TOKENS) -> List[int]:
     """Deterministic token ids per template (shared prefixes per template)."""
