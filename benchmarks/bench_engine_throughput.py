@@ -1,0 +1,280 @@
+"""Engine fast-path throughput — batched prefill and ragged decode.
+
+Measures, on the reduced CPU-testable models the engine backend runs:
+
+* **prefill tokens/s** at queue depth ≥ 4: one bucketed ragged
+  ``prefill_many`` pass over the queue vs the sequential batch-1 loop it
+  replaced.  Two queue shapes: the *gated* point is a deep queue of
+  one-block prompts — the regime batching exists for, where the ~ms
+  fixed dispatch cost of a batch-1 XLA pass rivals its compute and the
+  batched pass amortizes it across the queue (CI gate: ≥ 2x) — plus an
+  informational point at the parity-scenario scale (48-token prompts),
+  where per-token compute dominates on CPU and the win is smaller.
+* **decode tokens/s/slot** for both cached-attention implementations
+  (``pallas`` ragged kernel — interpret mode on CPU, compiled on TPU —
+  and the XLA ``_sdpa`` path), at full slot occupancy.
+* **batch-occupancy histogram** of a flood run: per-tick active-slot
+  totals from ``DisaggregatedCluster.occupancy`` — how full the
+  continuous-batching slots actually run under backpressure.
+
+Output: CSV rows on stdout + ``reports/benchmarks/BENCH_engine.json``.
+``--check BASELINE`` enforces the ≥ 2x batched-prefill gate and fails on
+>2x regressions of the ratio/rate metrics vs the committed baseline
+(machine-robust: the primary gates are same-machine ratios, not absolute
+rates).
+
+    PYTHONPATH=src python -m benchmarks.bench_engine_throughput \
+        [--smoke] [--check FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json
+from repro.serving.disagg import DisaggregatedCluster, ServeRequest
+from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.workload import template_tokens
+
+MODEL_NAME = "phi4-mini-3.8b"
+MAX_LEN = 96
+MIN_PREFILL_SPEEDUP = 2.0      # ISSUE gate: batched ≥ 2x at depth ≥ 4
+
+
+def _build_model():
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    cfg = get_reduced(MODEL_NAME)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), jnp.bfloat16)
+    return cfg, model, params
+
+
+def _queue(cfg, depth: int, lo: int, hi: int):
+    """depth distinct prompts with lengths ramping lo..hi inside one
+    padded bucket, so the batched pass exercises real ragged padding."""
+    out = []
+    for i in range(depth):
+        n = lo + ((hi - lo) * i) // max(depth - 1, 1)
+        toks = [t % cfg.vocab_size for t in template_tokens(i, n)]
+        out.append(toks)
+    return out
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _prefill_point(model, params, cfg, label: str, depth: int,
+                   lo: int, hi: int, repeats: int) -> dict:
+    """Batched vs sequential prompt passes over one queue of ``depth``
+    requests.  Prefix cache off: every repeat measures cold compute."""
+    prompts = _queue(cfg, depth, lo, hi)
+    tokens = sum(len(p) for p in prompts)
+    eng = PrefillEngine(model, params, max_len=MAX_LEN, cache_entries=0,
+                        max_batch=depth)
+    lengths = sorted(set(len(p) for p in prompts))
+    eng.warmup(lengths, batch_sizes=[1, depth])
+
+    def batched():
+        eng.prefill_many([(p, None, None) for p in prompts])
+
+    def sequential():
+        for p in prompts:
+            eng.prefill(p)
+
+    batched()                      # shake out any remaining first-call cost
+    sequential()
+    wall_b = _best_of(batched, repeats)
+    wall_s = _best_of(sequential, repeats)
+    out = {
+        "depth": depth,
+        "prompt_lengths": [lo, hi],
+        "prompt_tokens": tokens,
+        "batched_tokens_per_s": tokens / wall_b,
+        "sequential_tokens_per_s": tokens / wall_s,
+        "batched_speedup": wall_s / wall_b,
+        "batches": eng.stats.batches,
+        "padded_tokens": eng.stats.padded_tokens,
+    }
+    emit(f"bench_engine_prefill_{label}", wall_b / depth * 1e6,
+         f"depth={depth};lens={lo}..{hi};"
+         f"tok_per_s_batched={out['batched_tokens_per_s']:,.0f};"
+         f"tok_per_s_seq={out['sequential_tokens_per_s']:,.0f};"
+         f"speedup={out['batched_speedup']:.2f}x")
+    return out
+
+
+def bench_prefill(model, params, cfg, smoke: bool) -> dict:
+    """The gated point batches one-block prompts (the dispatch-bound
+    regime) at depth 16; full runs add the parity-scenario scale
+    (48-token, compute-bound on CPU) as an ungated reference."""
+    repeats = 3 if smoke else 5
+    out = {"gated": _prefill_point(model, params, cfg, "short_d16",
+                                   depth=16, lo=12, hi=16,
+                                   repeats=repeats)}
+    out["batched_speedup"] = out["gated"]["batched_speedup"]
+    if not smoke:
+        out["parity_scale"] = _prefill_point(model, params, cfg,
+                                             "parity_d8", depth=8,
+                                             lo=33, hi=48, repeats=repeats)
+    return out
+
+
+def bench_decode(model, params, cfg, steps: int) -> dict:
+    """Decode tokens/s/slot at full occupancy, per attention impl.  The
+    Pallas kernel runs in interpret mode on CPU — its absolute rate here
+    is an interpreter artifact (compiled path is TPU); the `_sdpa` row is
+    the CPU-meaningful rate."""
+    slots = 4
+    prompts = _queue(cfg, slots, 33, 48)
+    pre = PrefillEngine(model, params, max_len=MAX_LEN, cache_entries=0)
+    bundles = []
+    for p in prompts:
+        logits, caches = pre.prefill(p)
+        bundles.append((p, int(logits.argmax()), caches))
+    out = {}
+    for impl in ("sdpa", "pallas"):
+        dec = DecodeEngine(model, params, num_slots=slots, max_len=MAX_LEN,
+                           decode_impl=impl)
+        dec.warmup()
+        for i, (p, first, caches) in enumerate(bundles):
+            dec.admit(i, f"d{i}", caches, first, prompt_len=len(p),
+                      max_new=MAX_LEN, hashes=())
+        dec.step()                 # first stepped shape compiles here
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            n = len(dec.step())
+            assert n == slots      # nobody finishes inside the window
+        wall = time.perf_counter() - t0
+        out[impl] = {"tokens_per_s_per_slot": steps / wall,
+                     "tokens_per_s": steps * slots / wall}
+        emit(f"bench_engine_decode_{impl}", wall / steps / slots * 1e6,
+             f"slots={slots};tok_per_s_per_slot="
+             f"{out[impl]['tokens_per_s_per_slot']:,.1f}")
+    return out
+
+
+def bench_occupancy(model, params, cfg, n_requests: int) -> dict:
+    """Flood a 2-worker × 2-slot cluster and histogram the per-tick total
+    active slots: how full continuous batching runs under backpressure."""
+    cluster = DisaggregatedCluster(model, params, num_decode=2,
+                                   slots_per_worker=2, max_len=MAX_LEN,
+                                   adaptive=False)
+    for i in range(n_requests):
+        n = 33 + (15 * i) // max(n_requests - 1, 1)
+        toks = [t % cfg.vocab_size for t in template_tokens(i % 8, n)]
+        cluster.submit(ServeRequest(f"o{i}", toks, max_new_tokens=4))
+    t0 = time.perf_counter()
+    cluster.run_until_done()
+    wall = time.perf_counter() - t0
+    totals = [sum(occ) for occ in cluster.occupancy]
+    hist = {}
+    for t in totals:
+        hist[str(t)] = hist.get(str(t), 0) + 1
+    capacity = 4
+    busy = [t for t in totals if t > 0]
+    out = {
+        "requests": n_requests,
+        "wall_s": wall,
+        "ticks": len(totals),
+        "histogram": dict(sorted(hist.items())),
+        "mean_active_slots": sum(totals) / max(len(totals), 1),
+        "mean_busy_fill": (sum(busy) / len(busy) / capacity) if busy else 0.0,
+        "prefill_batches": cluster.prefill.stats.batches,
+        "prefill_batched_requests": cluster.prefill.stats.batched_requests,
+    }
+    emit("bench_engine_occupancy", wall / max(n_requests, 1) * 1e6,
+         f"requests={n_requests};mean_active={out['mean_active_slots']:.2f};"
+         f"busy_fill={out['mean_busy_fill']:.2f};"
+         f"batched_requests={out['prefill_batched_requests']}")
+    return out
+
+
+def _flatten(payload: dict, prefix: str = "") -> dict:
+    flat = {}
+    for k, v in payload.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            flat.update(_flatten(v, f"{key}."))
+        elif isinstance(v, (int, float)):
+            flat[key] = float(v)
+    return flat
+
+
+def check_regression(payload: dict, baseline_path: str,
+                     factor: float = 2.0) -> list:
+    """Hard gate: batched prefill ≥ MIN_PREFILL_SPEEDUP (same-machine
+    ratio, robust to runner speed).  Baseline gates: ratio and rate
+    metrics may not be ``factor``× lower than the committed baseline;
+    occupancy/counters are informational."""
+    failures = []
+    speedup = payload["prefill"]["batched_speedup"]
+    if speedup < MIN_PREFILL_SPEEDUP:
+        failures.append(f"prefill.batched_speedup: {speedup:.2f} < "
+                        f"required {MIN_PREFILL_SPEEDUP}x")
+    with open(baseline_path) as f:
+        base = _flatten(json.load(f))
+    cur = _flatten(payload)
+    for key, ref in base.items():
+        if key not in cur or ref <= 0:
+            continue
+        leaf = key.rsplit(".", 1)[-1]
+        if leaf.startswith(("batched_speedup", "tokens_per_s",
+                            "tokens_per_s_per_slot",
+                            "batched_tokens_per_s",
+                            "sequential_tokens_per_s", "mean_busy_fill")):
+            if cur[key] < ref / factor:
+                failures.append(f"{key}: {cur[key]:.2f} < baseline "
+                                f"{ref:.2f} / {factor}")
+    return failures
+
+
+def run(smoke: bool = False) -> dict:
+    cfg, model, params = _build_model()
+    payload = {
+        "mode": "smoke" if smoke else "full",
+        "model": MODEL_NAME,
+        "prefill": bench_prefill(model, params, cfg, smoke=smoke),
+        "decode": bench_decode(model, params, cfg,
+                               steps=8 if smoke else 32),
+        "occupancy": bench_occupancy(model, params, cfg,
+                                     n_requests=8 if smoke else 16),
+    }
+    save_json("BENCH_engine", payload)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced depths/steps (CI guard, not a "
+                         "measurement)")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="enforce the 2x prefill gate and fail on >2x "
+                         "regression vs this baseline JSON")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    payload = run(smoke=args.smoke)
+    if args.check:
+        failures = check_regression(payload, args.check)
+        if failures:
+            print("REGRESSION vs baseline:", file=sys.stderr)
+            for f in failures:
+                print(f"  {f}", file=sys.stderr)
+            sys.exit(1)
+        print(f"# regression check vs {args.check}: ok", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

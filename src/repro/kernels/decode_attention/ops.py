@@ -16,7 +16,12 @@ def _on_tpu() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("blk_k", "interpret"))
 def decode_attention(q, k, v, lengths, *, blk_k=256, interpret=None):
-    """q: (B,H,hd); k,v: (B,T,K,hd); lengths: (B,). Returns (B,H,hd)."""
+    """q: (B,H,hd); k,v: (B,T,K,hd); lengths: (B,). Returns (B,H,hd).
+
+    Rows with ``length == 0`` return zeros (empty online softmax): the
+    serving path hands the kernel the full fixed-slot batch, and inactive
+    slots carry length 0 — their output must be finite (it is discarded),
+    never NaN."""
     if interpret is None:
         interpret = not _on_tpu()
     b, h, hd = q.shape

@@ -8,7 +8,9 @@ import numpy as np
 
 def decode_attention_ref(q, k, v, lengths):
     """q: (B,H,hd); k,v: (B,T,K,hd); lengths: (B,) valid KV entries.
-    Returns (B,H,hd)."""
+    Returns (B,H,hd).  Rows with ``length == 0`` (a fully masked sequence —
+    e.g. an inactive continuous-batching slot) return zeros, matching the
+    Pallas kernel's empty-softmax convention."""
     b, h, hd = q.shape
     t, kh = k.shape[1], k.shape[2]
     g = h // kh
@@ -20,4 +22,5 @@ def decode_attention_ref(q, k, v, lengths):
     scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgt,btkh->bkgh", probs, vf)
+    out = jnp.where(lengths[:, None, None, None] > 0, out, 0.0)
     return out.reshape(b, h, hd).astype(q.dtype)

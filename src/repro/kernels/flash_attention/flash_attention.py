@@ -40,9 +40,13 @@ def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     q_start = qi * blk_q
     k_start = ki * blk_k
     kv_len = kvlen_ref[0]
+    q_len = kvlen_ref[1]
+    # causal diagonal offset: with an offset KV cache (kv_len > q_len) the
+    # first query row may already attend to kv_len - q_len leading keys
+    off = kv_len - q_len
     run = jnp.logical_and(
         k_start < kv_len,
-        (not causal) or (k_start <= q_start + blk_q - 1))
+        (not causal) or (k_start <= q_start + blk_q - 1 + off))
 
     @pl.when(run)
     def _compute():
@@ -54,7 +58,7 @@ def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         s = jnp.where(cols < kv_len, s, NEG_INF)           # padded keys inert
         if causal:
             rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
-            s = jnp.where(cols <= rows, s, NEG_INF)
+            s = jnp.where(cols <= rows + off, s, NEG_INF)
         m_prev = m_scr[...]
         l_prev = l_scr[...]
         m_cur = jnp.max(s, axis=1)
@@ -74,9 +78,12 @@ def _kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 def flash_attention_pallas(q, k, v, *, causal=True, blk_q=128, blk_k=128,
-                           interpret=False, kv_len=None):
+                           interpret=False, kv_len=None, q_len=None):
     """q: (B,S,H,hd); k,v: (B,T,K,hd), H = K·G, S % blk_q == 0 == T % blk_k.
-    kv_len masks keys at positions ≥ kv_len (right padding)."""
+    kv_len masks keys at positions ≥ kv_len (right padding).  q_len is the
+    true (unpadded) query length: with kv_len > q_len the causal diagonal
+    is shifted so the last query row attends to all kv_len keys (offset
+    cache, matching the reference oracle)."""
     b, s, h, hd = q.shape
     t, kh = k.shape[1], k.shape[2]
     g = h // kh
@@ -90,12 +97,14 @@ def flash_attention_pallas(q, k, v, *, causal=True, blk_q=128, blk_k=128,
                                causal=causal, sm_scale=sm_scale)
     if kv_len is None:
         kv_len = t
-    kv_len_arr = jnp.asarray([kv_len], jnp.int32)
+    if q_len is None:
+        q_len = kv_len          # square case: diagonal ends at the corner
+    kv_len_arr = jnp.asarray([kv_len, q_len], jnp.int32)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1,), lambda b_, h_, q_, k_: (0,),
+            pl.BlockSpec((2,), lambda b_, h_, q_, k_: (0,),
                          memory_space=pltpu.SMEM),
             pl.BlockSpec((1, blk_q, 1, hd), lambda b_, h_, q_, k_: (b_, q_, h_, 0)),
             pl.BlockSpec((1, blk_k, 1, hd), lambda b_, h_, q_, k_: (b_, k_, h_ // g, 0)),

@@ -38,5 +38,6 @@ def flash_attention(q, k, v, *, causal=True, blk_q=128, blk_k=128,
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     out = flash_attention_pallas(q, k, v, causal=causal, blk_q=blk_q,
-                                 blk_k=blk_k, interpret=interpret, kv_len=t)
+                                 blk_k=blk_k, interpret=interpret, kv_len=t,
+                                 q_len=s)
     return out[:, :s]

@@ -139,7 +139,7 @@ def _sdpa_chunked(q, k, v, qpos, q_per_kv, *, kind, kv_lengths=None,
 
 def attention(params, x, cfg, *, positions=None, kv_cache=None, write_index=None,
               kv_source=None, causal=True, kv_lengths=None, use_rope=True,
-              use_flash=False):
+              use_flash=False, decode_impl="sdpa"):
     """General GQA attention.
 
     x: (B,S,D) hidden states.
@@ -149,6 +149,10 @@ def attention(params, x, cfg, *, positions=None, kv_cache=None, write_index=None
         whole cache masked by position.
     kv_source: (B,T,D) — cross-attention keys/values come from here.
     kv_lengths: (B,) valid KV length per batch row (cross / cache masking).
+    decode_impl: "sdpa" (XLA einsum path) or "pallas" — on a single-token
+        cached step the Pallas ragged decode-attention kernel streams the KV
+        cache once, masked per-row by the (B,) position vector (TPU-compiled;
+        interpret mode on CPU).  Multi-token calls always use the XLA path.
     Returns (out, new_kv_cache_or_None).
     """
     b, s, d = x.shape
@@ -202,6 +206,17 @@ def attention(params, x, cfg, *, positions=None, kv_cache=None, write_index=None
         qp = positions.astype(jnp.int32)
 
     if kv_cache is not None:
+        if decode_impl == "pallas" and s == 1:
+            # Ragged single-token decode: one kernel pass over the whole
+            # slot batch, each row masked to its own valid prefix
+            # (kv_pos <= q_pos  ⇔  kv_pos < q_pos + 1).  The kernel's
+            # online softmax runs in fp32 like the _sdpa path's scores.
+            from repro.kernels.decode_attention import ops as decode_ops
+            lengths = qp[:, 0].astype(jnp.int32) + 1
+            out = decode_ops.decode_attention(q[:, 0], k, v, lengths)[:, None]
+            out = jnp.einsum("bshk,hkd->bsd", out,
+                             params["wo"].astype(COMPUTE_DTYPE))
+            return shard(out, "batch", "seq", "act_embed"), new_cache
         kind = "causal"
     elif kv_source is not None:
         kind = "length" if kv_lengths is not None else "full"

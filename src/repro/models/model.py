@@ -139,7 +139,7 @@ class Model:
     # ------------------------------------------------------------ blocks ----
 
     def _block_apply(self, desc, bp, x, bc, *, positions, write_index,
-                     enc_out, causal=True):
+                     enc_out, causal=True, decode_impl="sdpa"):
         """Apply one block. bc (the block cache) is None in train mode.
         Returns (x, new_block_cache, moe_aux or None)."""
         cfg = self.cfg
@@ -149,7 +149,8 @@ class Model:
             h, kv = L.attention(bp["attn"], x, cfg, positions=positions,
                                 kv_cache=bc.get("kv") if bc else None,
                                 write_index=write_index, causal=causal,
-                                use_flash=self.use_flash)
+                                use_flash=self.use_flash,
+                                decode_impl=decode_impl)
             if bc is not None:
                 nc["kv"] = kv
             x = x + h
@@ -201,7 +202,8 @@ class Model:
     # ------------------------------------------------------------ stacks ----
 
     def _run_stack(self, stack, x, *, caches=None, positions=None,
-                   write_index=None, enc_out=None, causal=True, remat=False):
+                   write_index=None, enc_out=None, causal=True, remat=False,
+                   decode_impl="sdpa"):
         """lax.scan over periods. Returns (x, new_caches_or_None, aux_sum)."""
         collect = caches is not None
 
@@ -214,7 +216,8 @@ class Model:
                 bc = pc[f"p{i}"] if pc is not None else None
                 xx, ncb, aux = self._block_apply(
                     desc, pp[f"p{i}"], xx, bc, positions=positions,
-                    write_index=write_index, enc_out=enc_out, causal=causal)
+                    write_index=write_index, enc_out=enc_out, causal=causal,
+                    decode_impl=decode_impl)
                 new_c[f"p{i}"] = ncb
                 if aux is not None:
                     aux_sum = aux_sum + aux["moe_aux_loss"]
@@ -330,6 +333,49 @@ class Model:
                             params["unembed"].astype(L.COMPUTE_DTYPE))
         return logits[:, 0].astype(jnp.float32), new_caches
 
+    def prefill_batched(self, params, tokens, lengths, max_len=None):
+        """Ragged prompt batch: one jitted pass over right-padded prompts.
+
+        ``tokens``: (B, S) int32, each row right-padded to S; ``lengths``:
+        (B,) valid prompt length per row.  Returns (last_logits (B, V) —
+        row ``i``'s logits taken at position ``lengths[i] - 1`` — and the
+        batch cache bundle; row ``i`` of the caches is a valid decode/donor
+        cache for positions < ``lengths[i]``).
+
+        Exactness under right-padding needs every sequence mixer to be
+        causal attention (:attr:`supports_padded_prefill`): a padding token
+        at position j ≥ length is never attended by a query at position
+        < j, and the garbage K/V it writes is masked (and later overwritten
+        by decode) before any real query can reach it.  Recurrent mixers
+        (mamba/xLSTM) would absorb padding tokens into their terminal
+        state, so padded batches are gated off for them — equal-length
+        groups (no padding) remain exact for every family."""
+        cfg = self.cfg
+        x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+        x = shard(x, "batch", "seq", "act_embed")
+        b, s = tokens.shape
+        max_len = max_len or s
+        caches = self.cache_init(b, max_len)
+        positions = jnp.arange(s, dtype=jnp.int32)
+        x, new_caches, _ = self._run_stack(
+            params["stack"], x, caches=caches, positions=positions,
+            write_index=0)
+        idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0, s - 1)
+        x = jnp.take_along_axis(x, idx[:, None, None], axis=1)   # (B,1,D)
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            params["unembed"].astype(L.COMPUTE_DTYPE))
+        return logits[:, 0].astype(jnp.float32), new_caches
+
+    @property
+    def supports_padded_prefill(self) -> bool:
+        """Right-padded ragged prompt batches are exact only for pure
+        causal-attention stacks (see :meth:`prefill_batched`); recurrent
+        mixers fold padding tokens into their terminal decode state.
+        Equal-length (padding-free) batches are always allowed."""
+        return (all(d.mixer == "attn" and not d.cross for d in self.descs)
+                and self.cfg.family not in ("encdec", "vlm"))
+
     @property
     def supports_prefill_resume(self) -> bool:
         """Prefix-resumable prompt passes need every mixer's sequence state
@@ -387,9 +433,13 @@ class Model:
             return out
         return jax.vmap(fill, in_axes=(0, 0))(params["stack"], caches)
 
-    def decode(self, params, caches, tokens, cur_index):
+    def decode(self, params, caches, tokens, cur_index, decode_impl="sdpa"):
         """One decode step. tokens: (B,1) int32; cur_index: scalar int32, or
-        an int32 (B,) vector for ragged continuous batching."""
+        an int32 (B,) vector for ragged continuous batching.
+
+        ``decode_impl="pallas"`` routes the cached-attention step through
+        the Pallas ragged decode kernel (per-row length masking from the
+        position vector); ``"sdpa"`` keeps the XLA einsum path."""
         cfg = self.cfg
         x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
         x = shard(x, "decode_batch", None, "act_embed")
@@ -400,7 +450,7 @@ class Model:
             positions = cur[:, None]
         x, new_caches, _ = self._run_stack(
             params["stack"], x, caches=caches, positions=positions,
-            write_index=cur)
+            write_index=cur, decode_impl=decode_impl)
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = jnp.einsum("bsd,dv->bsv", x,
                             params["unembed"].astype(L.COMPUTE_DTYPE))

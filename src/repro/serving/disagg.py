@@ -85,12 +85,18 @@ class DisaggregatedCluster:
                  seed: int = 0,
                  prefill_cache_entries: int = 16,
                  kv_transfer_per_block: float = 0.0015,
+                 batch_prefill: bool = True,
+                 max_prefill_batch: int = 8,
+                 decode_impl: str = "pallas",
                  control: Optional[ControlPlane] = None):
         self.model = model
+        self.batch_prefill = batch_prefill
         self.prefill = PrefillEngine(model, params, max_len,
-                                     cache_entries=prefill_cache_entries)
+                                     cache_entries=prefill_cache_entries,
+                                     max_batch=max_prefill_batch)
         self.decoders = [DecodeEngine(model, params, slots_per_worker,
-                                      max_len, worker_id=i)
+                                      max_len, worker_id=i,
+                                      decode_impl=decode_impl)
                          for i in range(num_decode)]
         self.control = control or ControlPlane(
             num_decode,
@@ -110,6 +116,10 @@ class DisaggregatedCluster:
         self.pending: List[ServeRequest] = []
         self.running: Dict[str, Tuple[ServeRequest, int, int]] = {}
         self.done: List[ServeRequest] = []
+        # per-tick decode occupancy snapshot (active slots per worker),
+        # recorded by step(): the batch-occupancy observable
+        # bench_engine_throughput histograms
+        self.occupancy: List[Tuple[int, ...]] = []
         self._t0 = time.monotonic()
 
     # ----------------------------------------------------------- lifecycle --
@@ -125,6 +135,7 @@ class DisaggregatedCluster:
 
     def _try_schedule(self):
         still: List[ServeRequest] = []
+        placed: List[Tuple[ServeRequest, int, int]] = []
         for req in self.pending:
             # ONE routing call: its overlap vector is the pre-insert view —
             # the recorded PoA counterfactual must not self-credit the
@@ -143,31 +154,47 @@ class DisaggregatedCluster:
                 still.append(req)  # backpressure: retry next tick
                 continue
             self.control.log_decision(req.request_id, worker, overlap, now)
-            logits, caches = self.prefill.prefill(req.tokens, req.extras,
-                                                  hashes=req.hashes)
-            first = int(np.argmax(logits))
-            moved = dec.admit(slot, req.request_id, caches, first,
-                              prompt_len=len(req.tokens),
-                              max_new=req.max_new_tokens,
-                              hashes=req.hashes)
+            # reserve before the next request routes, so one tick's
+            # placements see consistent slot accounting; the jitted
+            # compute for ALL of this tick's placements runs as one
+            # bucketed prompt pass below.
+            dec.reserve(slot, req.request_id)
             self.control.router.on_schedule(worker, req.tokens,
                                             now=self._now(),
                                             hashes=req.hashes)
             req.worker = worker
             req.overlap = overlap
             req.overlaps = tuple(overlaps)
+            placed.append((req, worker, slot))
+        self.pending = still
+        if not placed:
+            return
+        if self.batch_prefill:
+            outs = self.prefill.prefill_many(
+                [(req.tokens, req.extras, req.hashes)
+                 for req, _, _ in placed])
+        else:
+            outs = [self.prefill.prefill(req.tokens, req.extras,
+                                         hashes=req.hashes) + (0,)
+                    for req, _, _ in placed]
+        for (req, worker, slot), (logits, caches, row) in zip(placed, outs):
+            first = int(np.argmax(logits))
+            moved = self.decoders[worker].admit(
+                slot, req.request_id, caches, first,
+                prompt_len=len(req.tokens), max_new=req.max_new_tokens,
+                hashes=req.hashes, src_row=row)
             req.transfer_blocks = moved
             req.transfer_charge = moved * self.kv_transfer_per_block
             req.first_token_t = self._now()
             req.last_token_t = req.first_token_t
             req.output = [first]
             self.running[req.request_id] = (req, worker, slot)
-        self.pending = still
 
     def step(self) -> int:
         """One scheduler tick: admit pending, advance every decode engine.
         Returns number of completed requests this tick."""
         self._try_schedule()
+        self.occupancy.append(tuple(d.active_count for d in self.decoders))
         completed = 0
         for dec in self.decoders:
             for rid, tok, done in dec.step():

@@ -23,6 +23,7 @@ charge is what reintroduces the KV-movement cost the routing game is about.
 """
 from __future__ import annotations
 
+import functools
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -38,7 +39,7 @@ from repro.models.model import Model
 
 @dataclass
 class PrefillStats:
-    """Cumulative prefix-cache accounting (one instance per engine)."""
+    """Cumulative prefix-cache + batching accounting (one per engine)."""
     requests: int = 0
     total_blocks: int = 0        # full blocks across all prompts
     reused_blocks: int = 0       # blocks resumed from the prefix cache
@@ -46,25 +47,40 @@ class PrefillStats:
     computed_tokens: int = 0     # suffix tokens actually run through compute
     flops: float = 0.0           # ≈ 2·N_active·computed_tokens
     wall_s: float = 0.0          # jitted prompt-pass wall time
+    batches: int = 0             # jitted prompt passes issued (any width)
+    batched_requests: int = 0    # requests served by a width>1 pass
+    padded_tokens: int = 0       # pad tokens run through compute (overhead)
 
     def as_dict(self) -> dict:
         return dict(requests=self.requests, total_blocks=self.total_blocks,
                     reused_blocks=self.reused_blocks,
                     total_tokens=self.total_tokens,
                     computed_tokens=self.computed_tokens,
-                    flops=self.flops, wall_s=self.wall_s)
+                    flops=self.flops, wall_s=self.wall_s,
+                    batches=self.batches,
+                    batched_requests=self.batched_requests,
+                    padded_tokens=self.padded_tokens)
 
 
 class PrefillEngine:
     def __init__(self, model: Model, params, max_len: int,
-                 cache_entries: int = 16, block_size: int = BLOCK_SIZE):
+                 cache_entries: int = 16, block_size: int = BLOCK_SIZE,
+                 max_batch: int = 8):
         self.model = model
         self.params = params
         self.max_len = max_len
         self.block_size = block_size
         self.cache_entries = cache_entries
+        # batched prompt passes: cold prompts bucket into one right-padded
+        # ragged pass (lengths vector), resumes group by (start, suffix).
+        # Batch widths are padded to powers of two so the jit shape set
+        # stays O(log max_batch) per length bucket.
+        self.max_batch = max(1, max_batch)
         self._prefill = jax.jit(
             lambda p, batch: model.prefill(p, batch, max_len=max_len))
+        self._prefill_batched = jax.jit(
+            lambda p, toks, lens: model.prefill_batched(p, toks, lens,
+                                                        max_len=max_len))
         # start is traced (one compile per suffix length, not per offset)
         self._resume = jax.jit(model.prefill_resume)
         # prefix cache: full hash chain of a completed prompt pass → its
@@ -111,12 +127,33 @@ class PrefillEngine:
     def clear_cache(self) -> None:
         self._cache.clear()
 
+    def _padded_len(self, n: int) -> int:
+        """Cold-bucket sequence length: next block multiple when the model
+        tolerates right-padding, the exact length otherwise."""
+        if self.model.supports_padded_prefill:
+            return -(-n // self.block_size) * self.block_size
+        return n
+
+    def _width(self, n: int) -> int:
+        """Batch width for ``n`` group members: next power of two, capped
+        at ``max_batch`` — bounds the jitted shape set to O(log max_batch)
+        widths per length bucket."""
+        w = 1
+        while w < min(n, self.max_batch):
+            w *= 2
+        return w
+
     def warmup(self, prompt_lengths: Sequence[int],
-               suffix_lengths: Sequence[int] = ()) -> None:
+               suffix_lengths: Sequence[int] = (),
+               batch_sizes: Sequence[int] = (1,)) -> None:
         """Pre-compile the jitted prompt passes for the given prompt (and
         resume-suffix) lengths, without touching the prefix cache or the
         stats — so measured runs and the saturation detector never see
         multi-second XLA compile walls as TTFT.
+
+        ``batch_sizes`` lists the batched-pass widths to pre-compile (each
+        rounded to its power-of-two width); the cold ragged pass compiles
+        per (width, padded length) and resumes per (width, suffix length).
 
         Resume compilation is keyed on the suffix length alone (cache
         shapes are fixed at ``max_len`` and ``start`` is traced), so each
@@ -127,13 +164,23 @@ class PrefillEngine:
         for n in lengths:
             batch = {"tokens": jnp.zeros((1, n), jnp.int32)}
             _, caches = self._prefill(self.params, batch)
+        widths = sorted({self._width(max(1, int(b))) for b in batch_sizes})
+        for n in sorted({self._padded_len(x) for x in lengths}):
+            for w in widths:
+                self._prefill_batched(self.params,
+                                      jnp.zeros((w, n), jnp.int32),
+                                      jnp.ones((w,), jnp.int32))
         if caches is None or not self.model.supports_prefill_resume:
             return
         n_max = lengths[-1]
-        for s in sorted(set(int(x) for x in suffix_lengths)):
-            if 0 < s < n_max:
-                self._resume(self.params, caches,
-                             jnp.zeros((1, s), jnp.int32),
+        suffixes = [s for s in sorted(set(int(x) for x in suffix_lengths))
+                    if 0 < s < n_max]
+        for w in widths:
+            donor = caches if w == 1 else jax.tree.map(
+                lambda a: jnp.concatenate([a] * w, axis=1), caches)
+            for s in suffixes:
+                self._resume(self.params, donor,
+                             jnp.zeros((w, s), jnp.int32),
                              jnp.int32(n_max - s))
 
     # ----------------------------------------------------------- prefill ----
@@ -187,6 +234,147 @@ class PrefillEngine:
             self._store(hashes, caches)
         return logits, caches
 
+    # --------------------------------------------------- batched prefill ----
+
+    def prefill_many(self, requests: Sequence[Tuple[Sequence[int],
+                                                    Optional[dict],
+                                                    Optional[Sequence[int]]]]
+                     ) -> List[Tuple[np.ndarray, object, int]]:
+        """Batched prompt passes across queued requests.
+
+        ``requests``: ``(tokens, extras, hashes)`` triples (``hashes`` may
+        be None).  Returns a list aligned with the input order of
+        ``(last_logits (V,), cache_bundle, row)`` — ``cache_bundle`` is
+        the (possibly shared) batch bundle and ``row`` the request's batch
+        row, consumable by :meth:`DecodeEngine.admit` via ``src_row``.
+
+        Grouping: multimodal requests (``extras``) fall back to the
+        single-request path; prefix-cache hits group by (resume start,
+        suffix length) and run one stacked-donor resume pass; cold prompts
+        bucket by padded length (block multiple for models that tolerate
+        right-padding, exact length otherwise) and run one right-padded
+        ragged pass over the per-row lengths vector.  Identical prompts
+        inside one call collapse onto a single batch row.  Every grouped
+        pass is pinned logit-comparable to the sequential path by
+        ``tests/test_engine_batching.py``."""
+        n = len(requests)
+        results: List[Optional[Tuple[np.ndarray, object, int]]] = [None] * n
+        st = self.stats
+        can_resume = self.model.supports_prefill_resume and \
+            self.cache_entries > 0
+        # --- resolve: dedupe identical prompts, match prefix cache once ---
+        cold: dict = {}     # padded_len -> [(idx, tokens, hashes)]
+        resume: dict = {}   # (start, plen) -> [(idx, tokens, hashes, donor)]
+        alias: List[Tuple[int, int]] = []   # (dup idx, primary idx)
+        seen: dict = {}     # tokens tuple -> primary idx
+        for i, (tokens, extras, hashes) in enumerate(requests):
+            if extras:
+                # multimodal inputs carry per-request arrays; keep them on
+                # the exact single-request path
+                logits, caches = self.prefill(tokens, extras, hashes=hashes)
+                results[i] = (logits, caches, 0)
+                continue
+            key = tuple(tokens)
+            if key in seen:
+                alias.append((i, seen[key]))
+                continue
+            seen[key] = i
+            resumable = can_resume
+            if hashes is None and resumable:
+                hashes = block_hashes(tokens, self.block_size)
+            hashes = tuple(hashes or ())
+            start, donor = 0, None
+            if resumable and hashes:
+                m, donor = self._best_match(hashes)
+                start = min(m * self.block_size, len(tokens) - 1)
+                if start <= 0:
+                    start, donor = 0, None
+            if donor is not None:
+                resume.setdefault((start, len(tokens)), []).append(
+                    (i, tokens, hashes, donor))
+            else:
+                cold.setdefault(self._padded_len(len(tokens)), []).append(
+                    (i, tokens, hashes))
+        # --- cold buckets: one ragged right-padded pass per chunk ---------
+        for plen, group in cold.items():
+            for c0 in range(0, len(group), self.max_batch):
+                self._run_cold_chunk(plen, group[c0:c0 + self.max_batch],
+                                     results)
+        # --- resume groups: one stacked-donor pass per chunk --------------
+        for (start, _), group in resume.items():
+            for c0 in range(0, len(group), self.max_batch):
+                self._run_resume_chunk(start, group[c0:c0 + self.max_batch],
+                                       results)
+        for i, j in alias:
+            results[i] = results[j]
+            st.requests += 1
+            st.total_blocks += len(tuple(requests[i][2] or ()))
+            st.total_tokens += len(requests[i][0])
+        return results  # fully populated: every request hit exactly one path
+
+    def _run_cold_chunk(self, plen: int, group, results) -> None:
+        w = self._width(len(group))
+        toks = np.zeros((w, plen), np.int32)
+        lens = np.ones((w,), np.int32)
+        for r, (_, tokens, _) in enumerate(group):
+            toks[r, :len(tokens)] = tokens
+            lens[r] = len(tokens)
+        t0 = time.perf_counter()
+        logits, caches = self._prefill_batched(
+            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        logits = np.asarray(logits)
+        wall = time.perf_counter() - t0
+        st = self.stats
+        st.batches += 1
+        st.wall_s += wall
+        if len(group) > 1:
+            st.batched_requests += len(group)
+        # pad overhead: right-padding inside rows + power-of-two pad rows
+        st.padded_tokens += int(np.sum(plen - lens[:len(group)])) \
+            + (w - len(group)) * plen
+        for r, (i, tokens, hashes) in enumerate(group):
+            st.requests += 1
+            st.total_blocks += len(hashes)
+            st.total_tokens += len(tokens)
+            st.computed_tokens += len(tokens)
+            st.flops += self._flops_per_token * len(tokens)
+            results[i] = (logits[r], caches, r)
+            if hashes and self.model.supports_prefill_resume \
+                    and self.cache_entries > 0:
+                self._store(hashes, jax.tree.map(
+                    lambda a, r=r: a[:, r:r + 1], caches))
+
+    def _run_resume_chunk(self, start: int, group, results) -> None:
+        w = self._width(len(group))
+        suffixes = np.stack(
+            [np.asarray(tokens[start:], np.int32) for _, tokens, _, _ in group]
+            + [np.asarray(group[0][1][start:], np.int32)] * (w - len(group)))
+        donors = [d for *_, d in group] + [group[0][3]] * (w - len(group))
+        stacked = donors[0] if w == 1 else jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=1), *donors)
+        t0 = time.perf_counter()
+        logits, caches = self._resume(self.params, stacked,
+                                      jnp.asarray(suffixes), jnp.int32(start))
+        logits = np.asarray(logits)
+        wall = time.perf_counter() - t0
+        st = self.stats
+        st.batches += 1
+        st.wall_s += wall
+        if len(group) > 1:
+            st.batched_requests += len(group)
+        st.padded_tokens += (w - len(group)) * suffixes.shape[1]
+        for r, (i, tokens, hashes, _) in enumerate(group):
+            st.requests += 1
+            st.total_blocks += len(hashes)
+            st.reused_blocks += start // self.block_size
+            st.total_tokens += len(tokens)
+            st.computed_tokens += len(tokens) - start
+            st.flops += self._flops_per_token * (len(tokens) - start)
+            results[i] = (logits[r], caches, r)
+            if hashes:
+                self._store(hashes, jax.tree.map(
+                    lambda a, r=r: a[:, r:r + 1], caches))
+
 
 @dataclass
 class Slot:
@@ -198,19 +386,31 @@ class Slot:
 
 
 class DecodeEngine:
-    """Fixed-slot continuous batcher around the jitted ragged decode step."""
+    """Fixed-slot continuous batcher around the jitted ragged decode step.
+
+    ``decode_impl`` selects the cached-attention step: ``"pallas"``
+    (default) streams the KV cache through the ragged Pallas decode kernel
+    on the per-slot lengths vector (TPU-compiled, interpret mode on CPU);
+    ``"sdpa"`` keeps the XLA einsum reference path — the two are pinned
+    token-stream identical by ``tests/test_engine_batching.py``."""
 
     def __init__(self, model: Model, params, num_slots: int, max_len: int,
-                 worker_id: int = 0, resident_blocks: int = 4096):
+                 worker_id: int = 0, resident_blocks: int = 4096,
+                 decode_impl: str = "pallas"):
+        if decode_impl not in ("pallas", "sdpa"):
+            raise ValueError(f"unknown decode_impl {decode_impl!r}")
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
         self.worker_id = worker_id
+        self.decode_impl = decode_impl
         self.slots = [Slot() for _ in range(num_slots)]
         self.caches = model.cache_init(num_slots, max_len)
         self.tokens = np.zeros((num_slots, 1), np.int32)
-        self._decode = jax.jit(model.decode, donate_argnums=1)
+        self._decode = jax.jit(
+            functools.partial(model.decode, decode_impl=decode_impl),
+            donate_argnums=1)
         # KV-block residency (the worker's G1 view): bounded LRU over the
         # block hashes this worker has admitted.  The transfer() hop is
         # charged only for blocks NOT in this set — a cache-warm routing
@@ -241,10 +441,25 @@ class DecodeEngine:
             self._resident.popitem(last=False)
         return new
 
+    def reserve(self, slot: int, request_id: str) -> None:
+        """Claim ``slot`` for ``request_id`` before its (batched) prefill
+        has produced a cache bundle, so a scheduler placing several
+        requests in one tick sees consistent ``free_slot`` accounting.
+        A reserved-but-unadmitted slot holds no cache state: :meth:`step`
+        skips it until :meth:`admit` lands (or :meth:`release` frees
+        it)."""
+        s = self.slots[slot]
+        assert not s.active, (slot, s.request_id)
+        s.active = True
+        s.request_id = request_id
+
     def admit(self, slot: int, request_id: str, prefill_caches,
               first_token: int, prompt_len: int, max_new: int,
-              hashes: Sequence[int] = ()) -> int:
+              hashes: Sequence[int] = (), src_row: int = 0) -> int:
         """Transfer a prefill cache bundle into ``slot`` (the NIXL hop).
+
+        ``src_row`` selects the bundle's batch row (batched prefill hands
+        every request of a group the same shared bundle).
 
         Returns the number of *non-resident* blocks the transfer had to
         move — the per-block charge of the prefill→decode hop.  Blocks
@@ -252,7 +467,7 @@ class DecodeEngine:
         here) ride for free; that asymmetry is the cache-affinity
         externality on the real path."""
         self.caches = _insert_cache(self.caches, prefill_caches, slot,
-                                    self.model)
+                                    self.model, src_row=src_row)
         s = self.slots[slot]
         s.active = True
         s.request_id = request_id
@@ -287,8 +502,11 @@ class DecodeEngine:
         Returned-slot contract: when ``done`` is True the slot has already
         been released inside this step — it is free for admission in the
         same tick, and callers must NOT call :meth:`release` again."""
-        if self.active_count == 0:
+        if not any(s.active and s.generated for s in self.slots):
             return []
+        # reserved-but-unadmitted slots (active, no first token yet) carry
+        # no valid cache state: they decode as length-0 rows and their
+        # output is skipped below
         lengths = jnp.asarray([s.length if s.active else 0
                                for s in self.slots], jnp.int32)
         logits, self.caches = self._decode(
@@ -296,7 +514,7 @@ class DecodeEngine:
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         out = []
         for i, s in enumerate(self.slots):
-            if not s.active:
+            if not s.active or not s.generated:
                 continue
             tok = int(nxt[i])
             s.generated.append(tok)
@@ -310,19 +528,21 @@ class DecodeEngine:
         return out
 
 
-def _insert_cache(dst, src, slot: int, model: Model):
-    """Write a (batch=1) prefill cache bundle into decode slot `slot`.
+def _insert_cache(dst, src, slot: int, model: Model, src_row: int = 0):
+    """Write row ``src_row`` of a prefill cache bundle into decode slot
+    ``slot`` (batched prefill emits multi-row bundles; the sequential path
+    keeps row 0).
 
     Cross-mesh in production: each leaf is device_put to the decode mesh's
     sharding before insertion.
     """
     def leaf(d, s):
-        # d: (P, B, ...); s: (P, 1, ...) — prefill cache may have a shorter
+        # d: (P, B, ...); s: (P, W, ...) — prefill cache may have a shorter
         # sequence axis than the decode cache; pad on the right.
         if s.shape[2:] != d.shape[2:]:
             pads = [(0, 0), (0, 0)]
             for ds, ss in zip(d.shape[2:], s.shape[2:]):
                 pads.append((0, ds - ss))
             s = jnp.pad(s, pads)
-        return d.at[:, slot].set(s[:, 0].astype(d.dtype))
+        return d.at[:, slot].set(s[:, src_row].astype(d.dtype))
     return jax.tree.map(leaf, dst, src)

@@ -176,7 +176,16 @@ class EngineScenarioRunner:
             for m in range(1, n // block + 1):
                 start = min(m * block, n - 1)
                 suffixes.add(n - start)
-        self.cluster.prefill.warmup(lengths, sorted(suffixes))
+        # serialized runs only ever issue width-1 batched passes; flood
+        # runs can fill a whole tick's admissions, so pre-compile every
+        # power-of-two width the bucketing can emit
+        widths = [1]
+        cap = min(self.cluster.prefill.max_batch, max(len(self.specs), 1))
+        while self.cluster.batch_prefill and not self.serialize \
+                and widths[-1] * 2 <= cap:
+            widths.append(widths[-1] * 2)
+        self.cluster.prefill.warmup(lengths, sorted(suffixes),
+                                    batch_sizes=widths)
         # the admit path (cache insertion scatter) and the decode step
         # compile on first use too; run one dummy admit→step→auto-release
         # per decoder (empty hash list: no residency/transfer pollution)

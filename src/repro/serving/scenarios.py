@@ -140,7 +140,8 @@ _ENGINE_KEYS = {"model_name", "num_requests", "input_tokens",
                 "output_tokens", "slots_per_worker", "serialize", "warmup",
                 "model", "params", "adaptive", "router_config",
                 "detector_config", "routing_policy", "cache_ttl",
-                "prefill_cache_entries", "kv_transfer_per_block"}
+                "prefill_cache_entries", "kv_transfer_per_block",
+                "batch_prefill", "max_prefill_batch", "decode_impl"}
 
 
 def build_backend(name: str, backend: str = "analytic", seed: int = 0,

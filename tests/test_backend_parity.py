@@ -52,10 +52,19 @@ def _engine(reduced_model, **kw):
 # ------------------------------------------------------------- parity -------
 
 
+@pytest.mark.parametrize("engine_mode", [
+    pytest.param(dict(batch_prefill=True, decode_impl="pallas"), id="fast"),
+    pytest.param(dict(batch_prefill=False, decode_impl="sdpa"),
+                 id="reference"),
+])
 @pytest.mark.parametrize("name", PARITY_SCENARIOS)
-def test_backends_agree_on_decisions_and_regimes(name, reduced_model):
+def test_backends_agree_on_decisions_and_regimes(name, engine_mode,
+                                                 reduced_model):
     """τ=0 routing decisions, overlap vectors and the saturation-regime
-    transition sequence are identical across backends."""
+    transition sequence are identical across backends — with the engine
+    fast path (batched prefill + Pallas ragged decode) enabled as well as
+    with the sequential `_sdpa` reference: the fast path must not perturb
+    a single control-plane decision."""
     _, model, params = reduced_model
     sim = build_backend(name, backend="analytic", seed=0)
     res_a = sim.run()
@@ -66,7 +75,7 @@ def test_backends_agree_on_decisions_and_regimes(name, reduced_model):
                  for r in reqs_a]
 
     eng = build_backend(name, backend="engine", seed=0,
-                        model=model, params=params)
+                        model=model, params=params, **engine_mode)
     res_e = eng.run()
     decisions_e = [(i, w, round(ov, 12)) for i, w, ov in res_e.decisions]
     reqs_e = sorted(res_e.requests, key=lambda r: int(r.request_id[1:]))

@@ -1,0 +1,194 @@
+"""Slot-lifecycle fuzz: random admit/step/release schedules against
+``DecodeEngine``.
+
+Invariants pinned:
+
+* **No stale-KV leakage** — a reused slot must never attend to the previous
+  occupant's cache rows: every completed request's token stream equals the
+  stream of the same request decoded alone in a fresh single-slot engine.
+  Stale rows past ``length`` are reachable only through a masking bug, and
+  any such leak shifts the greedy stream.
+* **max_new contract** — exactly ``max_new`` tokens are generated beyond
+  the prefill's first token (the ``len(s.generated) >= s.max_new + 1``
+  condition in ``engine.py``), under both decode implementations.
+* **reserve() accounting** — a reserved slot is excluded from free_slot
+  until admitted or released.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import build_model
+from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.workload import template_tokens
+
+# real-model runs (jit compiles per prompt shape): tier-2 only
+pytestmark = pytest.mark.slow
+
+MAX_LEN = 96
+
+
+@pytest.fixture(scope="module")
+def reduced_model():
+    cfg = get_reduced("phi4-mini-3.8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), jnp.bfloat16)
+    return cfg, model, params
+
+
+def _toks(cfg, template, n=40):
+    return [t % cfg.vocab_size for t in template_tokens(template, n)]
+
+
+@pytest.fixture(scope="module")
+def prefilled(reduced_model):
+    """Prefill bundles + solo reference streams per (template, len) spec."""
+    cfg, model, params = reduced_model
+    pre = PrefillEngine(model, params, max_len=MAX_LEN, cache_entries=0)
+    out = {}
+    for template, n in [(0, 40), (1, 33), (2, 48), (3, 45)]:
+        toks = _toks(cfg, template, n)
+        logits, caches = pre.prefill(toks)
+        out[(template, n)] = (toks, int(np.argmax(logits)), caches)
+    return out
+
+
+def _solo_stream(solo, prefilled, spec, max_new):
+    """Reference: the request decoded alone in a (shared) 1-slot engine."""
+    toks, first, caches = prefilled[spec]
+    solo.admit(0, "solo", caches, first, prompt_len=len(toks),
+               max_new=max_new, hashes=())
+    stream = [first]
+    while solo.active_count:
+        for _, tok, _ in solo.step():
+            stream.append(tok)
+    return stream
+
+
+@pytest.mark.parametrize("decode_impl", ["pallas", "sdpa"])
+def test_slot_lifecycle_fuzz(reduced_model, prefilled, decode_impl):
+    """Random admit/step/release schedule: reused slots never leak the
+    previous occupant's KV, and every request generates exactly max_new
+    tokens beyond the first."""
+    _, model, params = reduced_model
+    rng = np.random.default_rng(7)
+    dec = DecodeEngine(model, params, num_slots=3, max_len=MAX_LEN,
+                       decode_impl=decode_impl)
+    solo = DecodeEngine(model, params, num_slots=1, max_len=MAX_LEN,
+                        decode_impl=decode_impl)
+    specs = list(prefilled)
+    refs = {}
+    live = {}          # rid -> (spec, max_new, stream so far)
+    finished = []
+    next_id = 0
+    for _ in range(60):
+        op = rng.random()
+        free = dec.free_slot()
+        if op < 0.45 and free is not None:
+            spec = specs[int(rng.integers(0, len(specs)))]
+            max_new = int(rng.integers(1, 6))
+            toks, first, caches = prefilled[spec]
+            rid = f"r{next_id}"
+            next_id += 1
+            dec.admit(free, rid, caches, first, prompt_len=len(toks),
+                      max_new=max_new, hashes=())
+            live[rid] = (spec, max_new, [first])
+            if (spec, max_new) not in refs:
+                refs[(spec, max_new)] = _solo_stream(
+                    solo, prefilled, spec, max_new)
+        elif op < 0.55 and dec.active_count:
+            # abandon a random active occupant: its slot is released with
+            # a partially-advanced cache — the next occupant must not see it
+            active = [i for i, s in enumerate(dec.slots) if s.active]
+            victim = active[int(rng.integers(0, len(active)))]
+            live.pop(dec.slots[victim].request_id)
+            dec.release(victim)
+        else:
+            for rid, tok, done in dec.step():
+                live[rid][2].append(tok)
+                if done:
+                    finished.append((rid, *live.pop(rid)))
+    # drain the rest
+    while dec.active_count:
+        for rid, tok, done in dec.step():
+            live[rid][2].append(tok)
+            if done:
+                finished.append((rid, *live.pop(rid)))
+    assert len(finished) >= 8   # the schedule really exercised reuse
+    for rid, spec, max_new, stream in finished:
+        # exactly max_new generated tokens beyond the first
+        assert len(stream) == max_new + 1, (rid, spec, max_new)
+        # bit-identical to the solo run: no stale KV from prior occupants
+        assert stream == refs[(spec, max_new)], (rid, spec, max_new)
+
+
+def test_short_occupant_after_long_occupant(reduced_model, prefilled):
+    """Directed stale-cache case: a short prompt admitted into a slot whose
+    previous occupant wrote KV far past the new occupant's length."""
+    _, model, params = reduced_model
+    dec = DecodeEngine(model, params, num_slots=1, max_len=MAX_LEN)
+    long_spec, short_spec = (2, 48), (1, 33)
+    toks, first, caches = prefilled[long_spec]
+    dec.admit(0, "long", caches, first, prompt_len=len(toks), max_new=5,
+              hashes=())
+    while dec.active_count:
+        dec.step()
+    toks, first, caches = prefilled[short_spec]
+    dec.admit(0, "short", caches, first, prompt_len=len(toks), max_new=5,
+              hashes=())
+    stream = [first]
+    while dec.active_count:
+        for _, tok, _ in dec.step():
+            stream.append(tok)
+    solo = DecodeEngine(model, params, num_slots=1, max_len=MAX_LEN)
+    assert stream == _solo_stream(solo, prefilled, short_spec, 5)
+
+
+def test_reserve_excludes_slot_until_admit(reduced_model, prefilled):
+    """reserve() claims a slot for a not-yet-prefilled request: free_slot
+    skips it, admit fills it, release frees it."""
+    _, model, params = reduced_model
+    dec = DecodeEngine(model, params, num_slots=2, max_len=MAX_LEN)
+    dec.reserve(0, "pending")
+    assert dec.free_slot() == 1
+    dec.reserve(1, "pending2")
+    assert dec.free_slot() is None
+    with pytest.raises(AssertionError):
+        dec.reserve(0, "clash")
+    toks, first, caches = prefilled[(0, 40)]
+    dec.admit(0, "pending", caches, first, prompt_len=len(toks), max_new=1,
+              hashes=())
+    assert dec.slots[0].request_id == "pending"
+    out = dec.step()   # only the admitted slot decodes; reserved is skipped
+    assert [rid for rid, _, _ in out] == ["pending"]
+    assert out[0][2] is True
+    assert dec.free_slot() == 0    # done slot auto-released; 1 still reserved
+    dec.release(1)
+    assert sum(not s.active for s in dec.slots) == 2
+
+
+def test_max_new_one_and_cap(reduced_model, prefilled):
+    """Contract edges: max_new=1 emits exactly one decode token; a request
+    near max_len stops at the cache capacity guard."""
+    _, model, params = reduced_model
+    dec = DecodeEngine(model, params, num_slots=1, max_len=MAX_LEN)
+    toks, first, caches = prefilled[(0, 40)]
+    dec.admit(0, "one", caches, first, prompt_len=len(toks), max_new=1,
+              hashes=())
+    out = dec.step()
+    assert len(out) == 1 and out[0][2] is True
+    assert dec.free_slot() == 0
+    # max_len guard: slot stops before overrunning the cache
+    dec.admit(0, "cap", caches, first, prompt_len=len(toks),
+              max_new=10_000, hashes=())
+    n = 0
+    while dec.active_count:
+        for _, _, done in dec.step():
+            n += 1
+            if done:
+                break
+        assert n < MAX_LEN
+    assert dec.slots[0].length == 0    # released
+    assert n == MAX_LEN - 1 - len(toks)

@@ -1,0 +1,105 @@
+"""Property tests for both Pallas kernels against their pure-jnp oracles.
+
+Hypothesis drives shapes and ragged lengths through the regions where
+blocked attention kernels historically break: lengths of 0/1, lengths
+straddling a key-block boundary (``blk_k ± 1``), sequence lengths that are
+not a multiple of the block (right-padding path), and every GQA group
+ratio from MQA to MHA.  Block size must be a pure performance knob —
+``blk_k`` invariance is asserted as part of every decode example rather
+than at a single hand-picked shape.
+
+``hypothesis`` is an optional dependency (the CI engine lane installs it;
+the base container may not have it) — the module skips cleanly when
+missing.  Examples are capped small: each example jit-compiles a kernel
+variant in interpret mode, so the budget goes to boundary coverage
+(explicit ``@example`` pins) rather than bulk random sampling.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, example, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.kernels.decode_attention.ops import decode_attention  # noqa: E402
+from repro.kernels.decode_attention.ref import decode_attention_ref  # noqa: E402
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: E402
+from repro.kernels.flash_attention.ref import flash_attention_ref  # noqa: E402
+
+# interpret-mode kernels are slow and compile per shape: few, surgical
+# examples with no deadline (first example pays the jit wall)
+COMMON = dict(deadline=None, max_examples=12, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+
+BLK_K = 32
+
+
+def _qkv(key, b, s, t, h, kh, hd):
+    ks = jax.random.split(key, 3)
+    q_shape = (b, h, hd) if s is None else (b, s, h, hd)
+    q = jax.random.normal(ks[0], q_shape, jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kh, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kh, hd), jnp.float32)
+    return q, k, v
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 2**31 - 1),
+       t=st.integers(2, 160),
+       kh=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2, 4]),          # q_per_kv: MQA → GQA → MHA
+       raw_lengths=st.lists(st.integers(0, 200), min_size=1, max_size=4))
+@example(seed=0, t=BLK_K, kh=2, g=2,
+         raw_lengths=[0, 1, BLK_K - 1, BLK_K])         # block-edge lengths
+@example(seed=1, t=BLK_K + 1, kh=1, g=4,
+         raw_lengths=[BLK_K + 1])                      # t not block-multiple
+@example(seed=2, t=3 * BLK_K, kh=4, g=1,
+         raw_lengths=[2 * BLK_K - 1, 2 * BLK_K, 2 * BLK_K + 1])
+def test_decode_matches_ref_property(seed, t, kh, g, raw_lengths):
+    """Ragged decode == dense masked softmax for arbitrary (t, GQA ratio,
+    lengths) — including length 0 (defined as zero output) — and the
+    result is invariant to the key-block size."""
+    b, hd = len(raw_lengths), 16
+    q, k, v = _qkv(jax.random.PRNGKey(seed), b, None, t, kh * g, kh, hd)
+    lengths = jnp.asarray([min(n, t) for n in raw_lengths], jnp.int32)
+    out = decode_attention(q, k, v, lengths, blk_k=BLK_K, interpret=True)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    # blk_k is a tiling knob, never a semantic one
+    alt = decode_attention(q, k, v, lengths, blk_k=2 * BLK_K, interpret=True)
+    np.testing.assert_allclose(np.asarray(alt), np.asarray(out),
+                               atol=2e-5, rtol=2e-5)
+    # inactive rows (length 0) must be finite zeros, never NaN
+    zero = np.asarray(out)[np.asarray(lengths) == 0]
+    assert np.all(zero == 0.0)
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 2**31 - 1),
+       s=st.integers(1, 80),
+       extra=st.integers(0, 48),              # t = s + extra (offset cache)
+       kh=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2, 4]),
+       causal=st.booleans())
+@example(seed=0, s=BLK_K - 1, extra=0, kh=2, g=2, causal=True)
+@example(seed=1, s=BLK_K + 1, extra=1, kh=1, g=4, causal=True)
+@example(seed=2, s=1, extra=BLK_K, kh=4, g=1, causal=True)
+@example(seed=3, s=2 * BLK_K, extra=0, kh=2, g=1, causal=False)
+def test_flash_matches_ref_property(seed, s, extra, kh, g, causal):
+    """Blocked flash == dense softmax for non-multiple-of-block sequence
+    lengths, offset KV caches (t > s) and all GQA ratios, causal and not —
+    and invariant to both block sizes."""
+    b, hd, t = 1, 16, s + extra
+    q, k, v = _qkv(jax.random.PRNGKey(seed), b, s, t, kh * g, kh, hd)
+    out = flash_attention(q, k, v, causal=causal, blk_q=BLK_K, blk_k=BLK_K,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    alt = flash_attention(q, k, v, causal=causal, blk_q=2 * BLK_K,
+                          blk_k=2 * BLK_K, interpret=True)
+    np.testing.assert_allclose(np.asarray(alt), np.asarray(out),
+                               atol=2e-5, rtol=2e-5)
