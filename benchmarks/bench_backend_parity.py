@@ -184,7 +184,7 @@ def main() -> None:
     try:
         run(smoke=args.smoke, strict=True)
     except RuntimeError as e:
-        raise SystemExit(str(e))
+        raise SystemExit(str(e)) from e
 
 
 if __name__ == "__main__":

@@ -1,0 +1,102 @@
+"""Sanitizer overhead benchmark.
+
+Measures, per scenario, the end-to-end wall time of an un-instrumented
+run against the identical run under ``sanitize=True`` (full coherence
+sweeps at every sync/poll boundary plus the per-event guards), asserting
+bit-exact outputs along the way — the overhead numbers are only honest if
+both runs did exactly the same work.
+
+Also pins the default-off contract: constructing an unsanitized simulator
+attaches nothing (no wrapped handlers in the instance dict), so the
+sanitizer's cost when disabled is exactly zero per event.
+
+Output: CSV rows on stdout + ``reports/benchmarks/BENCH_sanitizer.json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_sanitizer [--smoke]
+    PYTHONPATH=src python -m benchmarks.bench_sanitizer --scenarios scale-64
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from benchmarks.common import emit, save_json
+from repro.serving.scenarios import build_simulator, list_scenarios
+
+DEFAULT_SCENARIOS = ("scale-64", "70b-1p2d-ramp", "cache-pressure-70b")
+
+
+def _fingerprint(res):
+    return (tuple((r.rid, r.decode_worker, r.finish_t) for r in res.completed),
+            repr(res.overall()))
+
+
+def _wall(name: str, fast: bool, sanitize: bool, repeats: int) -> tuple:
+    best, fp = float("inf"), None
+    for _ in range(repeats):
+        sim = build_simulator(name, seed=0, fast=fast, sanitize=sanitize)
+        t0 = time.perf_counter()
+        res = sim.run()
+        best = min(best, time.perf_counter() - t0)
+        fp = _fingerprint(res)
+    return best, fp
+
+
+def bench_scenario(name: str, fast: bool, repeats: int) -> dict:
+    base_s, base_fp = _wall(name, fast, sanitize=False, repeats=repeats)
+    san_s, san_fp = _wall(name, fast, sanitize=True, repeats=repeats)
+    assert base_fp == san_fp, f"{name}: sanitized run diverged"
+    ratio = san_s / base_s if base_s > 0 else float("inf")
+    emit(f"sanitizer_wall_{name}", san_s * 1e6,
+         f"{ratio:.2f}x_of_{base_s * 1e6:.0f}us_base")
+    return {"scenario": name, "fast": fast, "base_s": base_s,
+            "sanitized_s": san_s, "ratio": ratio}
+
+
+def bench_default_off(name: str = "scale-64") -> dict:
+    """The zero-cost-when-off proof: nothing is attached, so the hot path
+    is byte-for-byte the uninstrumented one (same bound methods).  The
+    REPRO_SANITIZE env var is held aside so this probes the *default*
+    path even inside the CI sanitizer lane."""
+    saved = os.environ.pop("REPRO_SANITIZE", None)
+    try:
+        sim = build_simulator(name, seed=0, fast=True)
+    finally:
+        if saved is not None:
+            os.environ["REPRO_SANITIZE"] = saved
+    wrapped = [a for a in ("_route", "_admit_decode", "_on_decode_done",
+                           "_on_sync", "_on_poll", "_new_kvbm")
+               if a in vars(sim)]
+    assert not wrapped and sim.sanitizer is None
+    emit("sanitizer_default_off_attachments", 0.0, "zero_wrapped_handlers")
+    return {"wrapped_handlers": wrapped}
+
+
+def run(scenarios, smoke: bool = False) -> dict:
+    repeats = 2 if smoke else 3
+    results = {"default_off": bench_default_off(),
+               "scenarios": [bench_scenario(n, fast=True, repeats=repeats)
+                             for n in scenarios]}
+    save_json("BENCH_sanitizer", results)
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer repeats (CI lane)")
+    ap.add_argument("--scenarios", default=",".join(DEFAULT_SCENARIOS),
+                    help="comma-separated registry scenario names")
+    args = ap.parse_args(argv)
+    names = [n.strip() for n in args.scenarios.split(",") if n.strip()]
+    unknown = set(names) - set(list_scenarios())
+    if unknown:
+        ap.error(f"unknown scenario(s): {', '.join(sorted(unknown))}")
+    print("name,us_per_call,derived")
+    run(names, smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -90,7 +90,7 @@ def bench_routing(name: str, n: int = 2000) -> dict:
                 router.best_worker(toks, now=now, hashes=hs)
 
         def decisions_legacy():
-            for toks, hs in reqs:                        # pre-PR: hashes
+            for toks, _hs in reqs:                       # pre-PR: hashes
                 router.best_worker(toks, now=now)        # inside the call
 
         res[f"decision_us_{mode}"] = timed_best_of(

@@ -1,0 +1,28 @@
+"""repro.analysis — repo-specific correctness tooling.
+
+Two instruments, both born from the hazard classes the serving hot-path
+PRs introduced (load-cache invalidating property setters, the threaded
+``hashes=`` memo, pin/unpin refcounts, the drain protocol, jit/Pallas
+purity):
+
+* a **static lint pass** (:mod:`repro.analysis.lint`, run as
+  ``python -m repro.analysis src tests benchmarks examples``) with
+  AST-based rules RA001-RA010 that catch those hazards at review time;
+* a **runtime coherence sanitizer** (:mod:`repro.analysis.sanitize`,
+  opt-in via ``REPRO_SANITIZE=1`` or ``sanitize=True`` on
+  ``Simulator``/``ControlPlane``/``DisaggregatedCluster``) that asserts
+  the load-bearing cross-structure invariants at event boundaries, with
+  recent-event-trace context on failure.
+"""
+from repro.analysis.lint import (Finding, RULES, lint_file, lint_paths,
+                                 rule_catalog)
+from repro.analysis.sanitize import (SanitizeError, sanitize_enabled,
+                                     attach_control_sanitizer,
+                                     attach_engine_sanitizer,
+                                     attach_sim_sanitizer)
+
+__all__ = [
+    "Finding", "RULES", "lint_file", "lint_paths", "rule_catalog",
+    "SanitizeError", "sanitize_enabled", "attach_sim_sanitizer",
+    "attach_engine_sanitizer", "attach_control_sanitizer",
+]

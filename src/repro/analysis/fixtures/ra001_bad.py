@@ -1,0 +1,12 @@
+"""RA001 bad: direct writes to setter-backed WorkerState fields."""
+
+
+def stale_the_cache(router):
+    st = router.workers[0]
+    st._active_blocks = 5.0       # bypasses the invalidating setter
+    st._healthy = False           # router keeps routing to a dead worker
+    st._capacity = 2.0            # normalized loads silently wrong
+
+
+def aug_assign(state):
+    state._active_blocks += 1.0   # augmented writes bypass it too

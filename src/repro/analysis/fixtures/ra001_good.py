@@ -1,0 +1,20 @@
+"""RA001 good: mutations go through the property setters; the owner's
+own ``self._x`` writes (inside WorkerState) are exempt."""
+
+
+def update_through_setters(router):
+    st = router.workers[0]
+    st.active_blocks = 5.0        # property setter invalidates the cache
+    st.healthy = False
+    st.capacity = 2.0
+
+
+class WorkerStateLike:
+    def __init__(self, worker_id):
+        self.worker_id = worker_id
+        self._active_blocks = 0.0  # the owning class initializes its slots
+        self._healthy = True
+        self._capacity = 1.0
+
+    def reset(self):
+        self._active_blocks = 0.0  # self-writes are the setter's own body

@@ -1,0 +1,13 @@
+"""RA002 bad: a hashes memo is in scope but hot-path calls drop it."""
+
+
+def route_request(router, req):
+    hashes = tuple(req.hashes)                       # memo bound here
+    worker, overlap, _ = router.best_worker(req.tokens, now=0.0)
+    router.on_schedule(worker, req.tokens, now=0.0)  # re-hashes again
+    return worker, overlap, hashes
+
+
+def score_overlaps(indexer, req, ids, now):
+    hs = req.hashes                                  # memo bound here
+    return hs, indexer.overlap_scores(req.tokens, ids, now)

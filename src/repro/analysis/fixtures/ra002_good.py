@@ -1,0 +1,15 @@
+"""RA002 good: the memo is threaded through every hot-path call (or no
+memo exists in the function at all, so one hash per call is the price)."""
+
+
+def route_request(router, req):
+    hashes = tuple(req.hashes)
+    worker, overlap, _ = router.best_worker(req.tokens, now=0.0,
+                                            hashes=hashes)
+    router.on_schedule(worker, req.tokens, now=0.0, hashes=hashes)
+    return worker, overlap
+
+
+def route_without_memo(router, tokens):
+    # no memo in scope: the callee hashes once, which is fine
+    return router.best_worker(tokens, now=0.0)

@@ -1,0 +1,29 @@
+"""RA003 bad: impure captures inside jit/Pallas-traced functions."""
+import random
+import time
+
+import jax
+
+_log = []
+
+
+@jax.jit
+def wall_clock_bakes_in(x):
+    t0 = time.time()              # runs once, at trace time
+    return x + t0
+
+
+@jax.jit
+def global_rng_bakes_in(x):
+    return x * random.random()    # one sample, frozen into the trace
+
+
+@jax.jit
+def mutates_capture(x):
+    _log.append("step")           # trace-time side effect only
+    return x + 1
+
+
+def build():
+    step = jax.jit(lambda x: x + time.perf_counter())  # via jit(fn) too
+    return step

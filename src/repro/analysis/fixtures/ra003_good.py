@@ -1,0 +1,26 @@
+"""RA003 good: jitted functions are pure; impure work stays outside the
+traced boundary; local containers may be mutated freely."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def pure_step(x, key):
+    noise = jax.random.normal(key, x.shape)   # explicit functional RNG
+    return x + noise
+
+
+@jax.jit
+def local_mutation_is_fine(xs):
+    acc = []                                  # bound inside the trace
+    for x in xs:
+        acc.append(x * 2)
+    return jnp.stack(acc)
+
+
+def timed_call(step, x, key):
+    t0 = time.perf_counter()                  # outside the jit boundary
+    y = step(x, key)
+    return y, time.perf_counter() - t0

@@ -1,0 +1,14 @@
+"""RA004 bad: a jitted Pallas wrapper whose kernel-shaping kwargs are
+missing from static_argnames — each distinct value recompiles silently,
+and a traced value bakes the first call's grid into every call."""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+@functools.partial(jax.jit, static_argnames=("blk_q",))
+def attention(q, k, v, *, blk_q=128, blk_k=128, interpret=None):
+    # blk_k and interpret shape the kernel grid but are traced args here
+    return pl.pallas_call(_attn_kernel, grid=(q.shape[0] // blk_q,),
+                          interpret=interpret)(q, k, v)

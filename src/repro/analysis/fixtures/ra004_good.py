@@ -1,0 +1,13 @@
+"""RA004 good: every kernel-shaping kwarg is static."""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("blk_q", "blk_k", "interpret"))
+def attention(q, k, v, *, blk_q=128, blk_k=128, interpret=None):
+    interpret = _on_cpu() if interpret is None else interpret
+    return pl.pallas_call(_attn_kernel, grid=(q.shape[0] // blk_q,),
+                          interpret=interpret)(q, k, v)

@@ -1,0 +1,21 @@
+"""RA005 bad: unseeded / process-global RNG feeding decisions."""
+import random
+
+import numpy as np
+
+
+def pick_worker(ids):
+    rng = np.random.default_rng()        # OS entropy: unreproducible
+    return ids[rng.integers(len(ids))]
+
+
+def shuffle_queue(queue):
+    random.shuffle(queue)                # process-global state
+
+
+def sample_load():
+    return np.random.poisson(4.0)        # numpy's global stream
+
+
+def make_stream():
+    return random.Random()               # unseeded instance

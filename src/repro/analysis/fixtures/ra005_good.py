@@ -1,0 +1,21 @@
+"""RA005 good: every stream is explicitly seeded."""
+import random
+
+import numpy as np
+
+
+def pick_worker(ids, seed):
+    rng = np.random.default_rng(seed)
+    return ids[rng.integers(len(ids))]
+
+
+def shuffle_queue(queue, seed):
+    random.Random(seed).shuffle(queue)
+
+
+def sample_load(rng):
+    return rng.poisson(4.0)              # caller-provided seeded stream
+
+
+def make_stream(seed=0):
+    return random.Random(seed)

@@ -1,0 +1,14 @@
+"""RA006 bad: iterating unordered sets where order reaches decisions."""
+
+
+def drain_workers(workers):
+    for wid in set(workers):             # hash-seed-dependent order
+        evict(wid)
+
+
+def collect(claims):
+    return [c for c in {x.key for x in claims}]   # comprehension source
+
+
+def snapshot(ids):
+    return list({i for i in ids})        # list(set) materializes the order

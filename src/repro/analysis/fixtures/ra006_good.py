@@ -1,0 +1,16 @@
+"""RA006 good: sets are sorted before any order-sensitive consumption;
+membership tests and set algebra (orderless uses) are fine."""
+
+
+def drain_workers(workers):
+    for wid in sorted(set(workers)):
+        evict(wid)
+
+
+def collect(claims):
+    return sorted({x.key for x in claims})
+
+
+def membership_only(ids, candidates):
+    live = set(ids)                      # building a set is fine
+    return [c for c in candidates if c in live]   # iterating a list

@@ -1,0 +1,13 @@
+"""RA007 bad: reaching into another module's private state."""
+
+
+def poke_router_cache(cluster):
+    cluster.router._state_cache = None           # owned by core/router.py
+
+
+def run_prefill(cluster, batch):
+    return cluster.prefill._prefill(cluster.prefill.params, batch)
+
+
+def inspect_claims(indexer, h):
+    return indexer._node_by_hash[h].workers      # owned by core/radix.py

@@ -1,0 +1,17 @@
+"""RA007 good: public audit/helper APIs instead of private attribute pokes."""
+
+
+def check_router(router):
+    return router.cache_coherent()
+
+
+def warm_caches(engine):
+    return engine.dummy_caches(8)
+
+
+class Indexer:
+    def __init__(self):
+        self._node_by_hash = {}                  # self-access is fine
+
+    def lookup(self, h):
+        return self._node_by_hash.get(h)

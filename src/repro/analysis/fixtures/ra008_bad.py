@@ -1,0 +1,9 @@
+"""RA008 bad: pins KV blocks but has no release path at all."""
+
+
+def admit(kvbm, worker, hashes, now):
+    kvbm.admit_blocks(worker, hashes, now=now)
+
+
+def hold(kvbm, worker, h):
+    kvbm.pin(worker, h)

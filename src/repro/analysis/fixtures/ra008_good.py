@@ -1,0 +1,10 @@
+"""RA008 good: every pin has a matching release path in the module."""
+
+
+def admit(kvbm, worker, hashes, now):
+    kvbm.admit_blocks(worker, hashes, now=now)
+
+
+def complete(kvbm, worker, hashes):
+    for h in hashes:
+        kvbm.unpin(worker, h)

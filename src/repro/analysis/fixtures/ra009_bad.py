@@ -1,0 +1,18 @@
+"""RA009 bad: wall-clock reads in an event-clock module.
+
+Linted via ``lint_source`` with a spoofed in-scope path such as
+``src/repro/serving/simulator.py`` (see fixtures/README.md) — the rule is
+scoped to event-clock modules by path.
+"""
+import time
+from datetime import datetime
+
+
+def on_poll(sim):
+    stamp = time.time()                  # host wall clock, not `now`
+    sim.poll_log.append(stamp)
+
+
+def settle(sim):
+    time.sleep(0.01)                     # host latency leaks into events
+    return datetime.now()

@@ -1,0 +1,9 @@
+"""RA009 good: every timestamp derives from the simulated event clock."""
+
+
+def on_poll(sim, now):
+    sim.poll_log.append(now)
+
+
+def settle(sim, now, delay):
+    return now + delay                   # event time arithmetic only

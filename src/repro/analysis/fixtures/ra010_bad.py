@@ -1,0 +1,20 @@
+"""RA010 bad: interpret-mode guard missing or hardcoded."""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def ragged_decode(q, k):
+    return pl.pallas_call(_kernel, grid=(4,))(q, k)          # no interpret=
+
+
+def ragged_decode_cpu(q, k):
+    return pl.pallas_call(_kernel, grid=(4,),
+                          interpret=True)(q, k)              # hardcoded
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_step(q, k, *, interpret=False):
+    return pl.pallas_call(_kernel, grid=(4,),
+                          interpret=interpret)(q, k)

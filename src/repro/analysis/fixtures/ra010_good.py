@@ -1,0 +1,16 @@
+"""RA010 good: interpret threaded from a platform guard, None default."""
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _on_cpu():
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_step(q, k, *, interpret=None):
+    interpret = _on_cpu() if interpret is None else interpret
+    return pl.pallas_call(_kernel, grid=(4,),
+                          interpret=interpret)(q, k)

@@ -1,0 +1,476 @@
+"""Runtime coherence sanitizer — opt-in cross-structure invariant checks.
+
+The serving hot path is fast because it trusts a handful of coherence
+invariants instead of recomputing state: the router's cached dense load
+vector, the indexer's claim counters, KVBM pin refcounts, the drain
+protocol, the engine's slot lifecycle.  The sanitizer re-derives each of
+those from first principles at event/tick boundaries and raises
+:class:`SanitizeError` — with the recent event trace attached — the moment
+the cheap view and the recomputed truth diverge.
+
+Enablement (default OFF, zero-cost when off — attachment happens once at
+construction, never per event):
+
+* ``REPRO_SANITIZE=1`` in the environment, or
+* ``sanitize=True`` on :class:`~repro.serving.simulator.Simulator`,
+  :class:`~repro.serving.control_plane.ControlPlane`, or
+  :class:`~repro.serving.disagg.DisaggregatedCluster`.
+
+Every check is a pure read: no RNG draws, no event pushes, no lazy tree
+sweeps (the radix audit walks read-only, unlike ``overlap_depths``), so a
+sanitized run is bit-exact with an un-instrumented one
+(``tests/test_sanitizer.py`` pins this over the whole scenario registry).
+
+Invariants checked on the analytic backend (:class:`SimSanitizer`):
+
+I1  indexer claims ⊆ G1-resident KVBM blocks, modulo requests routed but
+    not yet admitted (and draining workers, whose inert claims flush at
+    the role flip);
+I2  pin refcounts ≥ 0, and every block's pin count equals the number of
+    admitted in-flight requests whose hash chain contains it (pin/unpin
+    balanced at completion; no pin leaks);
+I3  pinned blocks are never demoted, freed, or over-unpinned;
+I4  radix tree structure: parent links, ``_node_by_hash`` ≡ live nodes,
+    empty-node pruning, claim counters, prefix closure;
+I5  router's cached dense load vector ≡ a fresh recompute from the table;
+I6  the drain protocol never routes to or admits onto a draining/
+    non-decode worker, and draining workers hold no queued transfers;
+I7  per-worker ``running`` equals the recomputed admitted-request count.
+
+On the engine backend (:class:`EngineSanitizer`): I4/I5 plus the
+``DecodeEngine`` slot lifecycle — reserve only into a free slot, admit
+only into the slot reserved for that request (no stale-KV slot reuse),
+slot table ≡ the cluster's running/placed view at every tick boundary.
+"""
+from __future__ import annotations
+
+import os
+from collections import deque
+from typing import Deque, Dict, List, Optional, Set, Tuple
+
+TRACE_LEN = 32
+
+
+def sanitize_enabled(default: Optional[bool] = None) -> bool:
+    """Resolve the sanitizer switch: an explicit ``sanitize=`` argument
+    wins; otherwise the ``REPRO_SANITIZE`` environment variable."""
+    if default is not None:
+        return bool(default)
+    return os.environ.get("REPRO_SANITIZE", "").strip().lower() in (
+        "1", "true", "yes", "on")
+
+
+class SanitizeError(AssertionError):
+    """A coherence invariant failed.  The message carries the invariant,
+    the divergence, and the recent event trace for context."""
+
+    def __init__(self, invariant: str, detail: str,
+                 trace: Optional[Deque[str]] = None):
+        self.invariant = invariant
+        self.detail = detail
+        lines = [f"sanitizer: {invariant}: {detail}"]
+        if trace:
+            lines.append("recent events (oldest first):")
+            lines.extend(f"  {e}" for e in trace)
+        super().__init__("\n".join(lines))
+
+
+class _Trace:
+    """Bounded ring buffer of recent event descriptions."""
+
+    def __init__(self, maxlen: int = TRACE_LEN):
+        self.events: Deque[str] = deque(maxlen=maxlen)
+
+    def add(self, desc: str) -> None:
+        self.events.append(desc)
+
+    def fail(self, invariant: str, detail: str) -> None:
+        raise SanitizeError(invariant, detail, self.events)
+
+
+# -------------------------------------------------------------- analytic ----
+
+
+class SimSanitizer:
+    """Coherence checks over a :class:`~repro.serving.simulator.Simulator`.
+
+    Attached by wrapping the simulator's bound event handlers as instance
+    attributes (the class stays untouched — an unsanitized simulator pays
+    nothing).  Light per-event checks run inline; the full cross-structure
+    sweep runs at the ``sync``/``poll`` boundaries, where the event plane
+    itself re-derives state.
+    """
+
+    def __init__(self, sim):
+        self.sim = sim
+        self.trace = _Trace()
+        # rid -> (worker, hash set): routed (claims inserted) but not yet
+        # admitted (blocks not yet in the KVBM) — the I1 exemption window
+        self.pending: Dict[int, Tuple[int, Set[int]]] = {}
+        # rid -> (worker, hash chain): admitted, in-flight decodes — the
+        # ground truth I2/I7 recompute from
+        self.admitted: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+        self._instrument()
+
+    # ------------------------------------------------------------- wiring ---
+
+    def _instrument(self) -> None:
+        sim = self.sim
+        self._route = sim._route
+        self._admit = sim._admit_decode
+        self._done = sim._on_decode_done
+        self._sync = sim._on_sync
+        self._poll = sim._on_poll
+        self._new_kvbm = sim._new_kvbm
+        sim._route = self._wrap_route
+        sim._admit_decode = self._wrap_admit
+        sim._on_decode_done = self._wrap_done
+        sim._on_sync = self._wrap_sync
+        sim._on_poll = self._wrap_poll
+        sim._new_kvbm = self._wrap_new_kvbm
+        for wid in sim.decode_ids:
+            self._instrument_kvbm(sim.workers[wid].kvbm)
+
+    def _instrument_kvbm(self, kv) -> None:
+        """Guard the eviction/refcount edges of one KVBM: demoting or
+        freeing a pinned block, or unpinning past zero, fails immediately
+        (the state it corrupts may be unreachable by the next sweep)."""
+        if kv is None or getattr(kv, "_sanitized", False):
+            return
+        kv._sanitized = True
+        orig_demote, orig_free, orig_unpin = kv._demote, kv.free, kv.unpin
+
+        def demote(blk):
+            if blk.pin_count > 0:
+                self.trace.fail(
+                    "I3 pinned-block eviction",
+                    f"worker {kv.worker_id}: demoting block "
+                    f"{blk.block_id:#x} out of {blk.tier} with "
+                    f"pin_count={blk.pin_count}")
+            return orig_demote(blk)
+
+        def free(block_id):
+            blk = kv.blocks.get(block_id)
+            if blk is not None and blk.pin_count > 0:
+                self.trace.fail(
+                    "I3 pinned-block free",
+                    f"worker {kv.worker_id}: freeing block {block_id:#x} "
+                    f"with pin_count={blk.pin_count}")
+            return orig_free(block_id)
+
+        def unpin(block_id):
+            blk = kv.blocks.get(block_id)
+            if blk is not None and blk.pin_count == 0:
+                self.trace.fail(
+                    "I2 unbalanced unpin",
+                    f"worker {kv.worker_id}: unpin of block {block_id:#x} "
+                    f"already at pin_count=0")
+            return orig_unpin(block_id)
+
+        kv._demote = demote
+        kv.free = free
+        kv.unpin = unpin
+
+    # ----------------------------------------------------------- wrappers ---
+
+    def _wrap_new_kvbm(self, worker):
+        kv = self._new_kvbm(worker)
+        self._instrument_kvbm(kv)
+        return kv
+
+    def _wrap_route(self, req):
+        self._route(req)
+        sim = self.sim
+        w = sim.workers[req.decode_worker]
+        self.trace.add(f"t={sim.now:.4f} route rid={req.rid} -> "
+                       f"worker {req.decode_worker} overlap={req.overlap:.3f}")
+        if w.role != "decode" or w.draining:
+            self.trace.fail(
+                "I6 drain protocol (routing)",
+                f"rid {req.rid} routed to "
+                f"{'draining' if w.draining else w.role} worker {w.wid}")
+        self.pending[req.rid] = (req.decode_worker, set(req.hashes))
+
+    def _wrap_admit(self, req):
+        sim = self.sim
+        w = sim.workers[req.decode_worker]
+        if w.role != "decode" or w.draining:
+            # the simulator's own RuntimeError would also fire inside
+            # _admit_decode; failing here attaches the event trace
+            self.trace.fail(
+                "I6 drain protocol (admission)",
+                f"rid {req.rid} admitted to "
+                f"{'draining' if w.draining else w.role} worker {w.wid}")
+        self._admit(req)
+        self.trace.add(f"t={sim.now:.4f} admit rid={req.rid} on "
+                       f"worker {req.decode_worker}")
+        self.pending.pop(req.rid, None)
+        self.admitted[req.rid] = (req.decode_worker, tuple(req.hashes))
+
+    def _wrap_done(self, req):
+        self.trace.add(f"t={self.sim.now:.4f} decode_done rid={req.rid} on "
+                       f"worker {req.decode_worker}")
+        self._done(req)
+        self.admitted.pop(req.rid, None)
+
+    def _wrap_sync(self):
+        self._sync()
+        self.trace.add(f"t={self.sim.now:.4f} sync")
+        self.check_all("sync")
+
+    def _wrap_poll(self):
+        self._poll()
+        self.trace.add(f"t={self.sim.now:.4f} poll")
+        self.check_all("poll")
+
+    # ------------------------------------------------------------- checks ---
+
+    def check_all(self, where: str = "sweep") -> None:
+        """The full cross-structure sweep (pure reads only)."""
+        sim = self.sim
+        fail = self.trace.fail
+
+        # I5: router load-vector cache vs fresh recompute
+        divergence = sim.router.cache_coherent()
+        if divergence is not None:
+            fail("I5 router load-cache coherence", f"at {where}: {divergence}")
+
+        # I4: radix tree structural audit (read-only walk)
+        for problem in sim.router.indexer.audit():
+            fail("I4 radix tree consistency", f"at {where}: {problem}")
+
+        # recompute the admitted view once: per-worker running counts and
+        # per-(worker, hash) expected pin counts
+        running: Dict[int, int] = {}
+        expected_pins: Dict[int, Dict[int, int]] = {}
+        for _rid, (wid, hashes) in self.admitted.items():
+            running[wid] = running.get(wid, 0) + 1
+            pins = expected_pins.setdefault(wid, {})
+            for h in hashes:
+                pins[h] = pins.get(h, 0) + 1
+        pending_by_worker: Dict[int, Set[int]] = {}
+        for _rid, (wid, hset) in self.pending.items():
+            pending_by_worker.setdefault(wid, set()).update(hset)
+
+        for wid in sim.decode_ids:
+            w = sim.workers[wid]
+            kv = w.kvbm
+
+            # I6: draining workers admit nothing and queue nothing
+            if w.draining and w.transfer_queue:
+                fail("I6 drain protocol (queued transfers)",
+                     f"at {where}: draining worker {wid} still holds "
+                     f"{len(w.transfer_queue)} queued transfer(s)")
+
+            # I7: admission-slot accounting
+            if w.running != running.get(wid, 0):
+                fail("I7 slot accounting",
+                     f"at {where}: worker {wid} reports running={w.running} "
+                     f"but {running.get(wid, 0)} admitted request(s) are "
+                     f"in flight")
+
+            if kv is None:
+                continue
+
+            # KVBM internal accounting (tier recounts, pin sign)
+            for problem in kv.audit():
+                fail("I2 KVBM accounting",
+                     f"at {where}: worker {wid}: {problem}")
+
+            # I2: pin refcounts ≡ admitted in-flight coverage
+            pins = expected_pins.get(wid, {})
+            for h, n in pins.items():
+                blk = kv.blocks.get(h)
+                if blk is None:
+                    fail("I2 pin balance",
+                         f"at {where}: worker {wid}: block {h:#x} backs "
+                         f"{n} in-flight decode(s) but is gone from the "
+                         f"KVBM")
+                elif blk.pin_count != n:
+                    fail("I2 pin balance",
+                         f"at {where}: worker {wid}: block {h:#x} has "
+                         f"pin_count={blk.pin_count}, expected {n} from "
+                         f"in-flight decodes")
+            for h, blk in kv.blocks.items():
+                if blk.pin_count > 0 and h not in pins:
+                    fail("I2 pin leak",
+                         f"at {where}: worker {wid}: block {h:#x} has "
+                         f"pin_count={blk.pin_count} but no in-flight "
+                         f"decode covers it")
+
+            # I1: claims ⊆ G1-resident ∪ pending-routed (draining workers'
+            # claims are inert — router health is off — and flush at flip)
+            if not w.draining:
+                pend = pending_by_worker.get(wid, ())
+                for h in sim.router.indexer.claimed_hashes(wid):
+                    blk = kv.blocks.get(h)
+                    if blk is not None and blk.tier == "G1":
+                        continue
+                    if h in pend:
+                        continue
+                    fail("I1 claim/residency closure",
+                         f"at {where}: worker {wid} claims block {h:#x} "
+                         f"which is "
+                         + (f"resident in {blk.tier}, not G1" if blk
+                            else "not in its KVBM")
+                         + " and not pending admission")
+
+
+def attach_sim_sanitizer(sim) -> SimSanitizer:
+    """Instrument a Simulator in place; returns the sanitizer (exposed as
+    ``sim.sanitizer``)."""
+    san = SimSanitizer(sim)
+    sim.sanitizer = san
+    return san
+
+
+# --------------------------------------------------------------- engines ----
+
+
+class EngineSanitizer:
+    """Coherence checks over a
+    :class:`~repro.serving.disagg.DisaggregatedCluster` (engine backend).
+
+    Per-call slot-lifecycle guards on every :class:`DecodeEngine` plus a
+    control-plane sweep (I4/I5) and a slot-table ≡ running-view recompute
+    at each tick boundary."""
+
+    def __init__(self, cluster):
+        self.cluster = cluster
+        self.trace = _Trace()
+        # (worker, slot) -> request_id reserved but not yet admitted
+        self.reserved: Dict[Tuple[int, int], str] = {}
+        self._instrument()
+
+    def _instrument(self) -> None:
+        cl = self.cluster
+        for dec in cl.decoders:
+            self._instrument_decoder(dec)
+        self._step = cl.step
+        cl.step = self._wrap_step
+
+    def _instrument_decoder(self, dec) -> None:
+        wid = dec.worker_id
+        orig_reserve, orig_admit, orig_release = (
+            dec.reserve, dec.admit, dec.release)
+
+        def reserve(slot, request_id):
+            s = dec.slots[slot]
+            if s.active:
+                self.trace.fail(
+                    "E1 slot reuse (reserve)",
+                    f"worker {wid}: reserving slot {slot} for "
+                    f"{request_id!r} while it is held by {s.request_id!r}")
+            self.trace.add(f"reserve w{wid}/s{slot} <- {request_id!r}")
+            out = orig_reserve(slot, request_id)
+            self.reserved[(wid, slot)] = request_id
+            return out
+
+        def admit(slot, request_id, prefill_caches, first_token,
+                  prompt_len, max_new, hashes=(), src_row=0):
+            s = dec.slots[slot]
+            holder = self.reserved.get((wid, slot))
+            if s.active and s.request_id != request_id:
+                self.trace.fail(
+                    "E1 slot reuse (admit)",
+                    f"worker {wid}: admitting {request_id!r} into slot "
+                    f"{slot} held by {s.request_id!r} — stale KV would be "
+                    f"served")
+            if holder is not None and holder != request_id:
+                self.trace.fail(
+                    "E1 slot reuse (admit)",
+                    f"worker {wid}: slot {slot} reserved for {holder!r} "
+                    f"but admitted {request_id!r}")
+            self.trace.add(f"admit w{wid}/s{slot} <- {request_id!r} "
+                           f"(prompt_len={prompt_len})")
+            out = orig_admit(slot, request_id, prefill_caches, first_token,
+                             prompt_len, max_new, hashes=hashes,
+                             src_row=src_row)
+            self.reserved.pop((wid, slot), None)
+            return out
+
+        def release(slot):
+            self.trace.add(f"release w{wid}/s{slot}")
+            self.reserved.pop((wid, slot), None)
+            return orig_release(slot)
+
+        dec.reserve = reserve
+        dec.admit = admit
+        dec.release = release
+
+    def _wrap_step(self):
+        out = self._step()
+        self.trace.add(f"tick t={self.cluster._now():.4f} "
+                       f"completed={out}")
+        self.check_all("tick")
+        return out
+
+    def check_all(self, where: str = "tick") -> None:
+        cl = self.cluster
+        fail = self.trace.fail
+
+        divergence = cl.control.router.cache_coherent()
+        if divergence is not None:
+            fail("I5 router load-cache coherence", f"at {where}: {divergence}")
+        for problem in cl.control.router.indexer.audit():
+            fail("I4 radix tree consistency", f"at {where}: {problem}")
+
+        # E2: slot table ≡ cluster running view.  Every running request
+        # owns exactly its recorded slot; every active slot is owned by a
+        # running request or a live reservation.
+        owned: Dict[Tuple[int, int], str] = dict(self.reserved)
+        for rid, (_req, worker, slot) in cl.running.items():
+            s = cl.decoders[worker].slots[slot]
+            if not s.active or s.request_id != rid:
+                fail("E2 slot accounting",
+                     f"at {where}: running request {rid!r} maps to "
+                     f"worker {worker} slot {slot}, which holds "
+                     f"{'nothing' if not s.active else repr(s.request_id)}")
+            owned[(worker, slot)] = rid
+        for dec in cl.decoders:
+            for i, s in enumerate(dec.slots):
+                if s.active and (dec.worker_id, i) not in owned:
+                    fail("E2 slot accounting",
+                         f"at {where}: worker {dec.worker_id} slot {i} "
+                         f"active for {s.request_id!r} but neither running "
+                         f"nor reserved — leaked slot")
+
+
+def attach_engine_sanitizer(cluster) -> EngineSanitizer:
+    """Instrument a DisaggregatedCluster in place; returns the sanitizer
+    (exposed as ``cluster.sanitizer``)."""
+    san = EngineSanitizer(cluster)
+    cluster.sanitizer = san
+    return san
+
+
+# ----------------------------------------------------------- control plane --
+
+
+class ControlPlaneSanitizer:
+    """Standalone control-plane checks (I4/I5) after every routing
+    decision — for users driving a bare :class:`ControlPlane` without
+    either backend's richer sanitizer."""
+
+    def __init__(self, control):
+        self.control = control
+        self.trace = _Trace()
+        self._select = control.select_worker
+        control.select_worker = self._wrap_select
+
+    def _wrap_select(self, tokens, **kw):
+        out = self._select(tokens, **kw)
+        self.trace.add(f"select rid={kw.get('rid')!r} -> worker {out[0]} "
+                       f"at now={kw.get('now', 0.0)}")
+        divergence = self.control.router.cache_coherent()
+        if divergence is not None:
+            self.trace.fail("I5 router load-cache coherence", divergence)
+        for problem in self.control.router.indexer.audit():
+            self.trace.fail("I4 radix tree consistency", problem)
+        return out
+
+
+def attach_control_sanitizer(control) -> ControlPlaneSanitizer:
+    san = ControlPlaneSanitizer(control)
+    control.sanitizer = san
+    return san

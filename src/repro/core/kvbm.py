@@ -213,6 +213,35 @@ class KVBlockManager:
         self.tier_usage[tgt] += 1
         self.promotions += 1
 
+    # ------------------------------------------------------------ audit -----
+
+    def audit(self) -> list:
+        """Audit hook (``repro.analysis.sanitize``): verify the manager's
+        internal accounting by one read-only pass over the block table.
+        Returns a list of violation descriptions (empty when consistent).
+
+        Checked: every block sits in a known tier; ``tier_usage`` matches
+        a recount of the block table; no negative pin counts.  (A tier
+        over capacity is *not* flagged: over-subscription is legal under
+        pin pressure — Prop. 5's ρ > 1 regime — and transiently after an
+        unpin until the next admission makes room.)"""
+        problems = []
+        usage = {t: 0 for t in TIERS}
+        for bid, blk in self.blocks.items():
+            if blk.tier not in usage:
+                problems.append(f"block {bid:#x}: unknown tier {blk.tier!r}")
+                continue
+            usage[blk.tier] += 1
+            if blk.pin_count < 0:
+                problems.append(
+                    f"block {bid:#x}: negative pin_count {blk.pin_count}")
+        for t in TIERS:
+            if usage[t] != self.tier_usage[t]:
+                problems.append(
+                    f"tier {t}: tier_usage says {self.tier_usage[t]}, "
+                    f"recount finds {usage[t]}")
+        return problems
+
     # ------------------------------------------------------------ stats -----
 
     def capacity_ratio(self) -> float:

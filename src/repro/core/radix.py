@@ -285,3 +285,70 @@ class KvIndexer:
 
     def num_blocks(self, worker: int) -> int:
         return self._worker_blocks.get(worker, 0)
+
+    def claimed_hashes(self, worker: int) -> List[int]:
+        """Audit hook: every block hash ``worker`` currently claims, from
+        a read-only tree walk (no TTL sweep — unlike ``overlap_depths``
+        this never mutates the tree)."""
+        out: List[int] = []
+        stack = [c for c in self.root.children.values()
+                 if worker in c.workers]
+        while stack:
+            n = stack.pop()
+            out.append(n.key)
+            stack.extend(c for c in n.children.values()
+                         if worker in c.workers)
+        return out
+
+    def audit(self) -> List[str]:
+        """Audit hook (``repro.analysis.sanitize``): verify the tree's
+        structural invariants by one read-only walk.  Returns a list of
+        violation descriptions (empty when consistent).
+
+        Checked: parent links and child keys agree; ``_node_by_hash``
+        tracks exactly the live non-root nodes; no unpruned empty node
+        (no claims, no children) survives; per-worker claim counts match
+        ``_worker_blocks`` exactly (absent == zero); claims are
+        prefix-closed (a claim on a node implies a claim on its parent).
+        """
+        problems: List[str] = []
+        counts: Dict[int, int] = {}
+        live = 0
+        stack = [(self.root, None)]
+        while stack:
+            node, parent = stack.pop()
+            if parent is not None:
+                live += 1
+                if node.parent is not parent:
+                    problems.append(
+                        f"node {node.key:#x}: broken parent link")
+                if self._node_by_hash.get(node.key) is not node:
+                    problems.append(
+                        f"node {node.key:#x}: missing/mismatched "
+                        f"_node_by_hash entry")
+                if not node.workers and not node.children:
+                    problems.append(
+                        f"node {node.key:#x}: empty node not pruned")
+                for w in node.workers:
+                    counts[w] = counts.get(w, 0) + 1
+                    if parent is not self.root and w not in parent.workers:
+                        problems.append(
+                            f"node {node.key:#x}: worker {w} claim has no "
+                            f"parent claim (prefix closure broken)")
+            for key, child in node.children.items():
+                if child.key != key:
+                    problems.append(
+                        f"node under {node.key:#x}: child key {key:#x} != "
+                        f"node.key {child.key:#x}")
+                stack.append((child, node))
+        if live != len(self._node_by_hash):
+            problems.append(
+                f"_node_by_hash has {len(self._node_by_hash)} entries for "
+                f"{live} live nodes (stale entries leak memory)")
+        if counts != self._worker_blocks:
+            diff = {w: (counts.get(w, 0), self._worker_blocks.get(w, 0))
+                    for w in set(counts) | set(self._worker_blocks)
+                    if counts.get(w, 0) != self._worker_blocks.get(w, 0)}
+            problems.append(
+                f"claim counters diverge (worker: actual vs counted) {diff}")
+        return problems

@@ -252,6 +252,31 @@ class KvPushRouter:
 
     # --------------------------------------------------------- bookkeeping --
 
+    def cache_coherent(self) -> Optional[str]:
+        """Audit hook (``repro.analysis.sanitize``): compare the cached
+        dense routing state against a fresh recompute from the worker
+        table.  Returns ``None`` when coherent (or when no cache is
+        live), else a description of the divergence.  Pure read — never
+        rebuilds or invalidates the cache."""
+        cached = self._state_cache
+        if cached is None:
+            return None
+        ids, pos, loads, ids_sorted = cached
+        fresh_ids = [w for w, st in self.workers.items() if st.healthy]
+        if ids != fresh_ids:
+            return (f"cached healthy ids {ids} != recomputed {fresh_ids} "
+                    f"(a health change bypassed the property setter)")
+        if pos != {wid: i for i, wid in enumerate(fresh_ids)}:
+            return f"cached id->position map {pos} inconsistent with {ids}"
+        fresh = np.asarray(self._normalized_load(fresh_ids), dtype=np.float64)
+        if loads.shape != fresh.shape or not np.array_equal(loads, fresh):
+            return (f"cached load vector {loads.tolist()} != recomputed "
+                    f"{fresh.tolist()} (a load/capacity write bypassed the "
+                    f"property setter)")
+        if ids_sorted != all(a < b for a, b in zip(ids, ids[1:])):
+            return f"cached ids-sorted flag {ids_sorted} wrong for {ids}"
+        return None
+
     def healthy_ids(self) -> List[int]:
         """Worker ids eligible for routing, in the table's stable order —
         the positional universe of ``costs()``/``best_worker()`` overlaps.

@@ -66,7 +66,8 @@ class ControlPlane:
                  poa_capacities: Sequence[float] = (),
                  planner_config: Optional[PlannerConfig] = None,
                  num_prefill: int = 0,
-                 log_decisions: bool = False):
+                 log_decisions: bool = False,
+                 sanitize: Optional[bool] = None):
         self.router = KvPushRouter(num_workers,
                                    router_config or KvRouterConfig(),
                                    seed=seed)
@@ -113,6 +114,16 @@ class ControlPlane:
         self.log_decisions = log_decisions
         self.decision_log: List[RoutingDecision] = []
         self._last_config: KvRouterConfig = self.router.config
+
+        # Opt-in coherence sanitizer for bare control-plane users; the
+        # backends pass sanitize=False here and attach their own richer
+        # sanitizers over this plane's structures.
+        self.sanitizer = None
+        if sanitize is not False:
+            from repro.analysis.sanitize import (attach_control_sanitizer,
+                                                 sanitize_enabled)
+            if sanitize_enabled(sanitize):
+                attach_control_sanitizer(self)
 
     # ------------------------------------------------------------ params ----
 

@@ -88,7 +88,8 @@ class DisaggregatedCluster:
                  batch_prefill: bool = True,
                  max_prefill_batch: int = 8,
                  decode_impl: str = "pallas",
-                 control: Optional[ControlPlane] = None):
+                 control: Optional[ControlPlane] = None,
+                 sanitize: Optional[bool] = None):
         self.model = model
         self.batch_prefill = batch_prefill
         self.prefill = PrefillEngine(model, params, max_len,
@@ -108,7 +109,8 @@ class DisaggregatedCluster:
                              or DetectorConfig(theta1=0.5, theta2=5.0)),
             cache_ttl=cache_ttl,
             poa_window_s=60.0, poa_window_count=64,
-            log_decisions=True)
+            log_decisions=True,
+            sanitize=False)   # the cluster attaches its own, richer one
         self.router = self.control.router
         self.poa = self.control.poa
         self.metrics = self.control.metrics
@@ -121,6 +123,16 @@ class DisaggregatedCluster:
         # bench_engine_throughput histograms
         self.occupancy: List[Tuple[int, ...]] = []
         self._t0 = time.monotonic()
+
+        # Opt-in runtime coherence sanitizer (repro.analysis.sanitize):
+        # slot-lifecycle guards on every decoder + a control-plane sweep
+        # per tick; the default (off) path carries no per-tick branch.
+        self.sanitizer = None
+        if sanitize is not False:
+            from repro.analysis.sanitize import (attach_engine_sanitizer,
+                                                 sanitize_enabled)
+            if sanitize_enabled(sanitize):
+                attach_engine_sanitizer(self)
 
     # ----------------------------------------------------------- lifecycle --
 

@@ -127,6 +127,16 @@ class PrefillEngine:
     def clear_cache(self) -> None:
         self._cache.clear()
 
+    def dummy_caches(self, prompt_len: int):
+        """A throwaway cache bundle from a zero-token prompt pass of
+        ``prompt_len`` — for warmup flows that need a structurally valid
+        bundle to drive admit/step compilation, without touching the
+        prefix cache or the stats (and without callers reaching into the
+        engine's jitted internals)."""
+        batch = {"tokens": jnp.zeros((1, prompt_len), jnp.int32)}
+        _, caches = self._prefill(self.params, batch)
+        return caches
+
     def _padded_len(self, n: int) -> int:
         """Cold-bucket sequence length: next block multiple when the model
         tolerates right-padding, the exact length otherwise."""
@@ -177,7 +187,7 @@ class PrefillEngine:
                     if 0 < s < n_max]
         for w in widths:
             donor = caches if w == 1 else jax.tree.map(
-                lambda a: jnp.concatenate([a] * w, axis=1), caches)
+                lambda a, w=w: jnp.concatenate([a] * w, axis=1), caches)
             for s in suffixes:
                 self._resume(self.params, donor,
                              jnp.zeros((w, s), jnp.int32),

@@ -35,6 +35,7 @@ cluster (backpressure + continuous batching exercise the real engines).
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
@@ -168,7 +169,6 @@ class EngineScenarioRunner:
         """Compile every jitted/XLA shape this run will hit, outside the
         measured path (compile walls would otherwise read as multi-second
         TTFTs and drive the saturation detector across θ1)."""
-        import jax.numpy as jnp
         block = self.cluster.prefill.block_size
         lengths = sorted(set(len(s.tokens) for s in self.specs))
         suffixes = set()
@@ -189,9 +189,7 @@ class EngineScenarioRunner:
         # the admit path (cache insertion scatter) and the decode step
         # compile on first use too; run one dummy admit→step→auto-release
         # per decoder (empty hash list: no residency/transfer pollution)
-        batch = {"tokens": jnp.zeros((1, lengths[-1]), jnp.int32)}
-        _, caches = self.cluster.prefill._prefill(
-            self.cluster.prefill.params, batch)
+        caches = self.cluster.prefill.dummy_caches(lengths[-1])
         for dec in self.cluster.decoders:
             dec.warmup()
             dec.admit(0, "__warmup__", caches, 0,
@@ -200,11 +198,10 @@ class EngineScenarioRunner:
             assert dec.active_count == 0
         # the first non-empty PoA evaluation lazily imports scipy's
         # Hungarian solver (~1 s) inside route()'s gauge export — a wall
-        # the detector would read as a saturating TTFT
-        try:
+        # the detector would read as a saturating TTFT; PoA falls back to
+        # its pure-python solve when scipy is absent
+        with contextlib.suppress(ImportError):
             import scipy.optimize  # noqa: F401
-        except ImportError:
-            pass                   # PoA falls back to its pure-python solve
 
     def run(self) -> EngineRunResult:
         if self.warmup_enabled:

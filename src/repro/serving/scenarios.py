@@ -128,7 +128,7 @@ def build_simulator(name: str, seed: int = 0, **overrides) -> Simulator:
     does not consume is forwarded to ``Scenario.build``."""
     sim_keys = {"router_config", "adaptive", "detector_config",
                 "routing_policy", "regime_params", "planner_config",
-                "lean_completed"}
+                "lean_completed", "sanitize"}
     sim_kw = {k: overrides.pop(k) for k in list(overrides)
               if k in sim_keys}
     return get_scenario(name, **overrides).build(seed=seed, **sim_kw)
@@ -141,7 +141,8 @@ _ENGINE_KEYS = {"model_name", "num_requests", "input_tokens",
                 "model", "params", "adaptive", "router_config",
                 "detector_config", "routing_policy", "cache_ttl",
                 "prefill_cache_entries", "kv_transfer_per_block",
-                "batch_prefill", "max_prefill_batch", "decode_impl"}
+                "batch_prefill", "max_prefill_batch", "decode_impl",
+                "sanitize"}
 
 
 def build_backend(name: str, backend: str = "analytic", seed: int = 0,

@@ -248,7 +248,8 @@ class Simulator:
                  seed: int = 0,
                  regime_params: Optional[dict] = None,
                  planner_config: Optional[PlannerConfig] = None,
-                 lean_completed: bool = False):
+                 lean_completed: bool = False,
+                 sanitize: Optional[bool] = None):
         self.cluster = cluster
         self.workload = workload
         # Large-pool scenarios keep 100k+ completed requests around; the
@@ -309,7 +310,8 @@ class Simulator:
             poa_num_workers=len(self._poa_universe),
             poa_window_s=30.0,
             planner_config=planner_config,
-            num_prefill=npre)
+            num_prefill=npre,
+            sanitize=False)   # the simulator attaches its own, richer one
         cp = self.control
         self.router = cp.router
         self.policy = cp.policy
@@ -349,6 +351,16 @@ class Simulator:
         self.completed: List[SimRequest] = []
         self._rid = itertools.count()
         self.poll_log: List[dict] = []
+
+        # Opt-in runtime coherence sanitizer (repro.analysis.sanitize):
+        # wraps the event handlers as instance attributes, so the default
+        # (off) path carries no per-event branch at all.
+        self.sanitizer = None
+        if sanitize is not False:
+            from repro.analysis.sanitize import (attach_sim_sanitizer,
+                                                 sanitize_enabled)
+            if sanitize_enabled(sanitize):
+                attach_sim_sanitizer(self)
 
     # ------------------------------------------------- pool projections -----
     #

@@ -3,6 +3,7 @@ accumulation, checkpoint/restart, and fault-tolerance hooks.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -77,12 +78,10 @@ class Trainer:
                                    seq_len=shape.seq_len,
                                    global_batch=shape.global_batch, seed=seed)
         if self.cfg.ckpt_dir:
-            try:
+            with contextlib.suppress(FileNotFoundError):
                 self.state, self.step = ckpt_lib.restore(
                     self.cfg.ckpt_dir, self.state)
                 print(f"restored checkpoint at step {self.step}")
-            except FileNotFoundError:
-                pass
 
     def run(self, num_steps: int, log: Optional[Callable[[dict], None]] = None):
         for _ in range(num_steps):

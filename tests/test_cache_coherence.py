@@ -67,7 +67,7 @@ def test_pinned_blocks_survive_pressure():
     res = sim.run()
     assert len(res.completed) > 0
     for p in res.poll_log:
-        for w, tiers in enumerate(p["tiers"]):
+        for _w, tiers in enumerate(p["tiers"]):
             assert all(n >= 0 for n in tiers.values())
     # after the drain every pin must have been released
     for kv in sim.kvbm:

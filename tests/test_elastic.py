@@ -25,7 +25,7 @@ def test_elastic_mesh_shrinks_data_axis():
 
 def test_straggler_detection_and_reassignment():
     sm = StragglerMitigator(factor=1.5)
-    for step in range(8):
+    for _step in range(8):
         sm.record(0, 1.0)
         sm.record(1, 1.1)
         sm.record(2, 3.0)  # straggler

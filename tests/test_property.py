@@ -83,7 +83,7 @@ def test_hungarian_never_worse_than_greedy(n, m, seed):
     greedy = 0.0
     for i in range(n):
         j = min((j for j in range(m) if j not in used),
-                key=lambda j: cost[i, j])
+                key=lambda j, i=i: cost[i, j])
         used.add(j)
         greedy += cost[i, j]
     assert hung <= greedy + 1e-9

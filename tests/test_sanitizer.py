@@ -1,0 +1,134 @@
+"""Sanitized runs are bit-exact with un-instrumented ones.
+
+Every check in ``repro.analysis.sanitize`` is a pure read (no RNG draws,
+no event pushes, no lazy sweeps), so enabling the sanitizer must not
+change a single routed worker, timestamp, or poll entry.  This suite pins
+that over the whole scenario registry, plus the enablement contract
+(argument > environment, zero-cost when off) and an engine-backend parity
+scenario under full instrumentation.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.sanitize import sanitize_enabled
+from repro.serving.control_plane import ControlPlane
+from repro.serving.scenarios import (build_backend, build_simulator,
+                                     list_scenarios, parity_scenarios)
+from repro.serving.simulator import ClusterConfig, Simulator
+from repro.serving.workload import WorkloadConfig
+
+ALL_SCENARIOS = list_scenarios()
+
+
+def _fingerprint(res):
+    """Everything observable about a run.  ``repr`` so NaN poll entries
+    (early PoA windows) compare equal between identical runs."""
+    return (
+        tuple((r.rid, r.decode_worker, r.overlap, r.prefill_end, r.finish_t)
+              for r in res.completed),
+        repr(res.overall()),
+        repr(res.poll_log),
+        tuple(res.role_flips),
+    )
+
+
+@pytest.mark.parametrize("name", ALL_SCENARIOS)
+def test_sanitized_run_bit_exact(name):
+    base = build_simulator(name, seed=0, fast=True, sanitize=False)
+    san = build_simulator(name, seed=0, fast=True, sanitize=True)
+    assert base.sanitizer is None
+    assert san.sanitizer is not None
+    assert _fingerprint(base.run()) == _fingerprint(san.run())
+
+
+# ---------------------------------------------------------- enablement ------
+
+
+def _tiny(**kw):
+    return Simulator(ClusterConfig.for_model("llama-3.1-70b", "1P/2D"),
+                     WorkloadConfig.single_level(8, hold_s=2.0),
+                     seed=0, **kw)
+
+
+def test_default_off_is_zero_cost():
+    """Without opt-in, nothing is attached: the event handlers stay plain
+    class methods (no per-event wrapper indirection at all)."""
+    sim = _tiny()
+    assert sim.sanitizer is None
+    for name in ("_route", "_admit_decode", "_on_poll", "_on_sync"):
+        assert name not in vars(sim)
+
+
+def test_env_var_enables(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled() is True
+    sim = _tiny()
+    assert sim.sanitizer is not None
+    sim.run()                                 # green under instrumentation
+
+
+def test_explicit_argument_beats_env(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert _tiny(sanitize=False).sanitizer is None
+    monkeypatch.delenv("REPRO_SANITIZE")
+    assert _tiny(sanitize=True).sanitizer is not None
+
+
+@pytest.mark.parametrize("value,expect", [
+    ("1", True), ("true", True), ("YES", True), ("on", True),
+    ("0", False), ("", False), ("off", False), ("no", False),
+])
+def test_env_var_spellings(monkeypatch, value, expect):
+    monkeypatch.setenv("REPRO_SANITIZE", value)
+    assert sanitize_enabled() is expect
+
+
+def test_control_plane_sanitizer_checks_each_decision():
+    cp = ControlPlane(4, sanitize=True)
+    assert cp.sanitizer is not None
+    tokens = list(range(64))
+    w, ov, overlaps, ids = cp.select_worker(tokens, now=0.0, rid=0)
+    assert w in ids and len(overlaps) == len(ids)
+    assert ControlPlane(4).sanitizer is None
+
+
+def test_simulator_inner_control_plane_not_double_attached(monkeypatch):
+    """The simulator attaches its own richer sanitizer; the inner
+    ControlPlane must not stack a second one on the same router."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    sim = _tiny()
+    assert sim.sanitizer is not None
+    assert sim.control.sanitizer is None
+
+
+# ------------------------------------------------------------- engine -------
+
+pytest_slow = pytest.mark.slow
+
+
+@pytest_slow
+def test_engine_parity_scenario_bit_exact_under_sanitizer():
+    """One parity scenario on the real-JAX engine backend, instrumented:
+    identical decisions, tokens, and regime transitions."""
+    from repro.configs import get_reduced
+    from repro.models import build_model
+
+    cfg = get_reduced("phi4-mini-3.8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), jnp.bfloat16)
+    name = parity_scenarios()[0]
+
+    runs = {}
+    for sanitize in (False, True):
+        eng = build_backend(name, backend="engine", seed=0,
+                            model=model, params=params, sanitize=sanitize)
+        assert (eng.cluster.sanitizer is not None) is sanitize
+        res = eng.run()
+        runs[sanitize] = (
+            [(i, w, round(ov, 12)) for i, w, ov in res.decisions],
+            [(r.request_id, tuple(r.output)) for r in
+             sorted(res.requests, key=lambda r: r.request_id)],
+            [(a, b) for _, a, b in res.regime_transitions],
+        )
+    assert runs[False] == runs[True]

@@ -1,0 +1,326 @@
+"""Seeded-violation corpus: corrupt live state deliberately and assert the
+sanitizer fires with a useful message.
+
+Each test runs a real (small) scenario to a green, fully-populated state,
+then breaks exactly one invariant the way a plausible bug would — a
+setter-bypassing write, a dropped unpin, a stale lookup-table entry — and
+asserts :class:`SanitizeError` names the invariant and carries the event
+trace.  This is the proof that every check can actually fail (a sanitizer
+that never fires is indistinguishable from one that checks nothing).
+"""
+import pytest
+
+from repro.analysis.sanitize import SanitizeError, attach_engine_sanitizer
+from repro.core.radix import _Node
+from repro.core.router import KvRouterConfig
+from repro.serving.control_plane import ControlPlane
+from repro.serving.engine import Slot
+from repro.serving.simulator import ClusterConfig, SimRequest, Simulator
+from repro.serving.workload import WorkloadConfig
+
+BOGUS_HASH = 0xDEAD_BEEF_F00D
+
+
+@pytest.fixture()
+def sim():
+    """A small completed run with instrumented, populated state."""
+    s = Simulator(ClusterConfig.for_model("llama-3.1-70b", "1P/2D"),
+                  WorkloadConfig.single_level(16, hold_s=4.0),
+                  seed=0, sanitize=True)
+    s.run()
+    s.sanitizer.check_all("post-run")        # baseline must be green
+    return s
+
+
+def _decode_worker(sim):
+    for wid in sim.decode_ids:
+        w = sim.workers[wid]
+        if not w.draining and w.kvbm is not None and w.kvbm.blocks:
+            return w
+    pytest.fail("no populated live decode worker")
+
+
+# ----------------------------------------------------------- I3 pins --------
+
+
+def test_demote_of_pinned_block_fires(sim):
+    kv = _decode_worker(sim).kvbm
+    bid = next(iter(kv.blocks))
+    kv.pin(bid)
+    with pytest.raises(SanitizeError, match="I3 pinned-block eviction"):
+        kv._demote(kv.blocks[bid])
+
+
+def test_free_of_pinned_block_fires(sim):
+    kv = _decode_worker(sim).kvbm
+    bid = next(iter(kv.blocks))
+    kv.pin(bid)
+    with pytest.raises(SanitizeError, match="I3 pinned-block free"):
+        kv.free(bid)
+
+
+def test_unpin_past_zero_fires(sim):
+    kv = _decode_worker(sim).kvbm
+    bid = next(iter(kv.blocks))
+    assert kv.blocks[bid].pin_count == 0     # run completed: all released
+    with pytest.raises(SanitizeError, match="I2 unbalanced unpin"):
+        kv.unpin(bid)
+
+
+# ------------------------------------------------------ I2 pin balance ------
+
+
+def test_pin_leak_fires(sim):
+    w = _decode_worker(sim)
+    w.kvbm.pin(next(iter(w.kvbm.blocks)))    # pinned, no in-flight decode
+    with pytest.raises(SanitizeError, match="I2 pin leak"):
+        sim.sanitizer.check_all()
+
+
+def test_inflight_decode_with_evicted_block_fires(sim):
+    w = _decode_worker(sim)
+    sim.sanitizer.admitted[10**9] = (w.wid, (BOGUS_HASH,))
+    w.running += 1                           # keep I7 quiet: isolate I2
+    with pytest.raises(SanitizeError,
+                       match="I2 pin balance.*gone from the KVBM"):
+        sim.sanitizer.check_all()
+
+
+def test_pin_count_mismatch_fires(sim):
+    w = _decode_worker(sim)
+    bid = next(iter(w.kvbm.blocks))
+    sim.sanitizer.admitted[10**9] = (w.wid, (bid,))   # decode without pin
+    w.running += 1
+    with pytest.raises(SanitizeError, match="I2 pin balance"):
+        sim.sanitizer.check_all()
+
+
+def test_kvbm_tier_usage_drift_fires(sim):
+    kv = _decode_worker(sim).kvbm
+    kv.tier_usage["G1"] += 1                 # accounting drift
+    with pytest.raises(SanitizeError, match="I2 KVBM accounting"):
+        sim.sanitizer.check_all()
+
+
+# ---------------------------------------------------------- I7 slots --------
+
+
+def test_running_count_drift_fires(sim):
+    _decode_worker(sim).running += 1
+    with pytest.raises(SanitizeError, match="I7 slot accounting"):
+        sim.sanitizer.check_all()
+
+
+# ---------------------------------------------------------- I6 drain --------
+
+
+def test_draining_worker_with_queued_transfers_fires(sim):
+    w = _decode_worker(sim)
+    w.draining = True
+    w.transfer_queue.append(
+        SimRequest(rid=10**9, template=0, tokens=[], output_tokens=1))
+    with pytest.raises(SanitizeError, match="I6 drain protocol"):
+        sim.sanitizer.check_all()
+
+
+def test_admit_onto_draining_worker_fires(sim):
+    w = _decode_worker(sim)
+    w.draining = True
+    req = SimRequest(rid=10**9, template=0, tokens=list(range(32)),
+                     output_tokens=1, decode_worker=w.wid)
+    with pytest.raises(SanitizeError, match="I6 drain protocol"):
+        sim._admit_decode(req)
+
+
+def test_route_with_every_worker_draining_fires(sim):
+    for wid in sim.decode_ids:
+        sim.workers[wid].draining = True
+    req = SimRequest(rid=10**9, template=0, tokens=list(range(64)),
+                     output_tokens=1)
+    with pytest.raises(SanitizeError, match="I6 drain protocol"):
+        sim._route(req)
+
+
+# --------------------------------------------------------- I1 closure -------
+
+
+def test_claim_without_resident_block_fires(sim):
+    w = _decode_worker(sim)
+    sim.router.indexer.insert(w.wid, [], now=sim.now, hashes=[BOGUS_HASH])
+    with pytest.raises(SanitizeError, match="I1 claim/residency closure"):
+        sim.sanitizer.check_all()
+
+
+# ------------------------------------------------------------ I4 radix ------
+
+
+def test_broken_parent_link_fires(sim):
+    idx = sim.router.indexer
+    node = next(iter(idx._node_by_hash.values()))
+    node.parent = None
+    with pytest.raises(SanitizeError, match="I4 radix tree consistency"):
+        sim.sanitizer.check_all()
+
+
+def test_claim_counter_drift_fires(sim):
+    idx = sim.router.indexer
+    wid = next(iter(idx._worker_blocks))
+    idx._worker_blocks[wid] += 1
+    with pytest.raises(SanitizeError, match="I4 radix tree consistency"):
+        sim.sanitizer.check_all()
+
+
+def test_stale_lookup_table_entry_fires(sim):
+    idx = sim.router.indexer
+    idx._node_by_hash[BOGUS_HASH] = _Node(key=BOGUS_HASH)
+    with pytest.raises(SanitizeError, match="I4 radix tree consistency"):
+        sim.sanitizer.check_all()
+
+
+def test_unpruned_empty_node_fires(sim):
+    idx = sim.router.indexer
+    parent = next(iter(idx._node_by_hash.values()))
+    ghost = _Node(key=BOGUS_HASH, parent=parent)     # no claims, no kids
+    parent.children[BOGUS_HASH] = ghost
+    idx._node_by_hash[BOGUS_HASH] = ghost
+    with pytest.raises(SanitizeError, match="I4 radix tree consistency"):
+        sim.sanitizer.check_all()
+
+
+def test_prefix_closure_break_fires(sim):
+    idx = sim.router.indexer
+    deep = next((n for n in idx._node_by_hash.values()
+                 if n.parent is not None and n.parent.parent is not None),
+                None)
+    assert deep is not None, "no depth-2 chain in the tree"
+    deep.workers[9999] = sim.now             # claim child, never parent
+    idx._worker_blocks[9999] = 1             # counters consistent: isolate
+    with pytest.raises(SanitizeError, match="I4 radix tree consistency"):
+        sim.sanitizer.check_all()
+
+
+# ------------------------------------------------------- I5 router cache ----
+
+
+def test_stale_router_load_cache_fires():
+    """A setter-bypassing load write (exactly what lint rule RA001 exists
+    to catch statically) leaves the cached dense load vector stale; the
+    next routing decision trips the sanitizer."""
+    cp = ControlPlane(16, router_config=KvRouterConfig(temperature=0.0),
+                      sanitize=True)
+    tokens = list(range(64))
+    cp.select_worker(tokens, now=0.0, rid=0)          # builds the cache
+    cp.router.workers[3]._active_blocks = 40.0        # ra: allow[RA001]
+    with pytest.raises(SanitizeError, match="I5 router load-cache"):
+        cp.select_worker(tokens, now=0.0, rid=1)
+
+
+def test_setter_write_keeps_cache_coherent():
+    cp = ControlPlane(16, router_config=KvRouterConfig(temperature=0.0),
+                      sanitize=True)
+    tokens = list(range(64))
+    cp.select_worker(tokens, now=0.0, rid=0)
+    cp.router.workers[3].active_blocks = 40.0         # through the setter
+    cp.select_worker(tokens, now=0.0, rid=1)          # no error
+
+
+# --------------------------------------------------------- error quality ----
+
+
+def test_error_carries_invariant_and_trace(sim):
+    _decode_worker(sim).running += 1
+    with pytest.raises(SanitizeError) as exc:
+        sim.sanitizer.check_all()
+    err = exc.value
+    assert err.invariant == "I7 slot accounting"
+    assert "running=" in err.detail
+    msg = str(err)
+    assert "recent events (oldest first):" in msg
+    assert "t=" in msg                       # real event history attached
+
+
+# ------------------------------------------------------------- engine -------
+
+
+class _FakeDecoder:
+    """Slot-lifecycle shape of :class:`DecodeEngine`, no JAX compute."""
+
+    def __init__(self, wid, num_slots=2):
+        self.worker_id = wid
+        self.slots = [Slot() for _ in range(num_slots)]
+
+    def reserve(self, slot, request_id):
+        s = self.slots[slot]
+        s.active = True
+        s.request_id = request_id
+
+    def admit(self, slot, request_id, prefill_caches, first_token,
+              prompt_len, max_new, hashes=(), src_row=0):
+        s = self.slots[slot]
+        s.active = True
+        s.request_id = request_id
+        s.length = prompt_len
+        return 0
+
+    def release(self, slot):
+        self.slots[slot] = Slot()
+
+
+class _FakeCluster:
+    def __init__(self):
+        self.decoders = [_FakeDecoder(0), _FakeDecoder(1)]
+        self.control = ControlPlane(2)
+        self.running = {}
+        self.now = 0.0
+
+    def _now(self):
+        return self.now
+
+    def step(self):
+        return []
+
+
+@pytest.fixture()
+def cluster():
+    cl = _FakeCluster()
+    attach_engine_sanitizer(cl)
+    return cl
+
+
+def test_reserve_into_held_slot_fires(cluster):
+    dec = cluster.decoders[0]
+    dec.reserve(0, "a")
+    with pytest.raises(SanitizeError, match="E1 slot reuse"):
+        dec.reserve(0, "b")
+
+
+def test_admit_over_other_requests_reservation_fires(cluster):
+    dec = cluster.decoders[0]
+    dec.reserve(1, "a")
+    with pytest.raises(SanitizeError, match="E1 slot reuse"):
+        dec.admit(1, "b", None, 0, 4, 8)
+
+
+def test_leaked_active_slot_fires(cluster):
+    dec = cluster.decoders[1]
+    dec.reserve(0, "a")
+    dec.admit(0, "a", None, 0, 4, 8)         # never entered cluster.running
+    with pytest.raises(SanitizeError, match="E2 slot accounting"):
+        cluster.step()
+
+
+def test_running_request_with_empty_slot_fires(cluster):
+    cluster.running["r1"] = (None, 0, 1)     # slot 1 was never admitted
+    with pytest.raises(SanitizeError, match="E2 slot accounting"):
+        cluster.step()
+
+
+def test_clean_lifecycle_is_green(cluster):
+    dec = cluster.decoders[0]
+    dec.reserve(0, "a")
+    dec.admit(0, "a", None, 0, 4, 8)
+    cluster.running["a"] = (None, 0, 0)
+    cluster.step()
+    del cluster.running["a"]
+    dec.release(0)
+    cluster.step()
