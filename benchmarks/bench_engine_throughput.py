@@ -16,10 +16,18 @@ Measures, on the reduced CPU-testable models the engine backend runs:
 * **batch-occupancy histogram** of a flood run: per-tick active-slot
   totals from ``DisaggregatedCluster.occupancy`` — how full the
   continuous-batching slots actually run under backpressure.
+* **paged-KV capacity and rate** at equal HBM: how many concurrent
+  decode requests a page pool sized to the dense engine's exact KV
+  footprint admits on a short-request workload (gate: ≥ 2x the dense
+  slot count), decode rate of the paged layout vs dense at matched
+  batch width (gate: ≥ 0.9x — the page gather must stay near-free),
+  KV HBM bytes committed per active request, and a page-pool
+  utilization histogram from a length-skewed flood.
 
 Output: CSV rows on stdout + ``reports/benchmarks/BENCH_engine.json``.
-``--check BASELINE`` enforces the ≥ 2x batched-prefill gate and fails on
->2x regressions of the ratio/rate metrics vs the committed baseline
+``--check BASELINE`` enforces the ≥ 2x batched-prefill gate, the ≥ 2x
+paged-capacity gate and the ≥ 0.9x paged-rate gate, and fails on >2x
+regressions of the ratio/rate metrics vs the committed baseline
 (machine-robust: the primary gates are same-machine ratios, not absolute
 rates).
 
@@ -37,13 +45,18 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, save_json
+from repro.core.radix import BLOCK_SIZE
 from repro.serving.disagg import DisaggregatedCluster, ServeRequest
-from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.engine import DecodeEngine, PrefillEngine, kv_token_bytes
 from repro.serving.workload import template_tokens
 
 MODEL_NAME = "phi4-mini-3.8b"
 MAX_LEN = 96
 MIN_PREFILL_SPEEDUP = 2.0      # ISSUE gate: batched ≥ 2x at depth ≥ 4
+MIN_PAGED_CAPACITY = 2.0       # ISSUE gate: ≥ 2x concurrent slots at
+                               # equal KV-pool HBM on short requests
+MIN_PAGED_RATE = 0.9           # ISSUE gate: ≤ 10% tokens/s/slot cost at
+                               # matched batch width
 
 
 def _build_model():
@@ -133,9 +146,14 @@ def bench_prefill(model, params, cfg, smoke: bool) -> dict:
 
 def bench_decode(model, params, cfg, steps: int) -> dict:
     """Decode tokens/s/slot at full occupancy, per attention impl.  The
-    Pallas kernel runs in interpret mode on CPU — its absolute rate here
-    is an interpreter artifact (compiled path is TPU); the `_sdpa` row is
-    the CPU-meaningful rate."""
+    Pallas kernels (``pallas``, ``paged``) run in interpret mode on CPU —
+    their absolute rates here are interpreter artifacts (compiled path is
+    TPU); the `_sdpa`-math rows (``sdpa``, ``paged_sdpa``) are the
+    CPU-meaningful rates, and their ratio is the paged-layout rate gate:
+    same batch width, same math, the only delta is the page-table
+    indirection + pool gather vs the contiguous ``max_len`` layout.  The
+    paged engines run the default pool (the dense worst case), which is
+    byte-identical HBM to the dense layout at this slot count."""
     slots = 4
     prompts = _queue(cfg, slots, 33, 48)
     pre = PrefillEngine(model, params, max_len=MAX_LEN, cache_entries=0)
@@ -144,24 +162,152 @@ def bench_decode(model, params, cfg, steps: int) -> dict:
         logits, caches = pre.prefill(p)
         bundles.append((p, int(logits.argmax()), caches))
     out = {}
-    for impl in ("sdpa", "pallas"):
+    for impl in ("sdpa", "pallas", "paged_sdpa", "paged"):
         dec = DecodeEngine(model, params, num_slots=slots, max_len=MAX_LEN,
                            decode_impl=impl)
-        dec.warmup()
+        if dec.paged:
+            # pre-compile every table width growth can widen to, so the
+            # timed window never pays a recompile at a block boundary
+            dec.warmup(table_widths=dec.width_ladder())
+        else:
+            dec.warmup()
         for i, (p, first, caches) in enumerate(bundles):
             dec.admit(i, f"d{i}", caches, first, prompt_len=len(p),
                       max_new=MAX_LEN, hashes=())
         dec.step()                 # first stepped shape compiles here
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            n = len(dec.step())
-            assert n == slots      # nobody finishes inside the window
-        wall = time.perf_counter() - t0
+        # best-of-3 windows: single-window walls on shared runners are
+        # scheduler-noise-dominated at this scale, and the paged rate
+        # gate is a ~10% margin
+        wall = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                n = len(dec.step())
+                assert n == slots  # nobody finishes inside the window
+            wall = min(wall, time.perf_counter() - t0)
         out[impl] = {"tokens_per_s_per_slot": steps / wall,
                      "tokens_per_s": steps * slots / wall}
         emit(f"bench_engine_decode_{impl}", wall / steps / slots * 1e6,
              f"slots={slots};tok_per_s_per_slot="
              f"{out[impl]['tokens_per_s_per_slot']:,.1f}")
+    return out
+
+
+def bench_paged_capacity(model, params, cfg, smoke: bool) -> dict:
+    """Concurrency at equal KV HBM.  The dense layout commits
+    ``num_slots × max_len`` rows up front, so 4 slots cost 24 pages of
+    HBM and admit exactly 4 requests no matter how short they are.  A
+    page pool of those same 24 pages admits short requests (16-token
+    prompt, 4 output tokens → 2-page worst case) until the pool gate
+    binds — the measured static capacity win — plus the per-request KV
+    bytes actually committed and a pool-utilization histogram from a
+    length-skewed flood through the full cluster."""
+    dense_slots = 4
+    pre = PrefillEngine(model, params, max_len=MAX_LEN, cache_entries=0)
+    short = [t % cfg.vocab_size for t in template_tokens(0, 16)]
+    logits, caches = pre.prefill(short)
+    first = int(logits.argmax())
+
+    pool_pages = dense_slots * (MAX_LEN // BLOCK_SIZE)
+    dec = DecodeEngine(model, params, num_slots=16, max_len=MAX_LEN,
+                       decode_impl="paged_sdpa", num_pages=pool_pages)
+    admitted = 0
+    while True:
+        slot = dec.free_slot()
+        if slot is None or not dec.can_admit(len(short), 4):
+            break
+        dec.admit(slot, f"c{admitted}", caches, first,
+                  prompt_len=len(short), max_new=4, hashes=())
+        admitted += 1
+    capacity_ratio = admitted / dense_slots
+    # bytes committed per active request: the paged pool charges mapped
+    # pages; the dense layout charges every slot's full max_len rows
+    paged_bytes_per_req = dec.kv_bytes_held() / max(admitted, 1)
+    dense_bytes_per_req = MAX_LEN * kv_token_bytes(model)
+
+    # rate gate at matched batch width, in the regime the capacity win
+    # lives in: short requests whose worst case keeps tables narrow, so
+    # the paged engine attends over its mapped pages while the dense
+    # layout attends over its committed max_len rows.  Same `_sdpa` math
+    # on both sides — the ratio isolates the paged layout's cost
+    # (page-table gather + pool scatter) against its compute saving.
+    rate_prompts = _queue(cfg, dense_slots, 16, 16)
+    rate_bundles = []
+    for p in rate_prompts:
+        lg, cc = pre.prefill(p)
+        rate_bundles.append((p, int(lg.argmax()), cc))
+    steps, rates = (8 if smoke else 12), {}
+    for impl, pages in (("sdpa", None), ("paged_sdpa", pool_pages)):
+        d = DecodeEngine(model, params, num_slots=dense_slots,
+                         max_len=MAX_LEN, decode_impl=impl,
+                         num_pages=pages)
+        if d.paged:
+            d.warmup(table_widths=d.width_ladder(16 + 40 + 1))
+        else:
+            d.warmup()
+        for i, (p, f, c) in enumerate(rate_bundles):
+            d.admit(i, f"r{i}", c, f, prompt_len=len(p), max_new=40,
+                    hashes=())
+        d.step()
+        wall = float("inf")
+        for _ in range(3):         # best-of-3: see bench_decode
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                assert len(d.step()) == dense_slots
+            wall = min(wall, time.perf_counter() - t0)
+        rates[impl] = steps * dense_slots / wall
+    rate_ratio = rates["paged_sdpa"] / rates["sdpa"]
+    emit("bench_engine_paged_rate_ratio", rate_ratio * 100,
+         f"paged_sdpa/sdpa={rate_ratio:.3f} at matched slots="
+         f"{dense_slots} (gate ≥ {MIN_PAGED_RATE})")
+    out = {
+        "pool_pages": pool_pages,
+        "dense_slots": dense_slots,
+        "paged_admitted": admitted,
+        "capacity_ratio": capacity_ratio,
+        "rate_ratio": rate_ratio,
+        "decode_tokens_per_s": {k: v for k, v in rates.items()},
+        "kv_hbm_bytes_per_active_request": paged_bytes_per_req,
+        "dense_kv_hbm_bytes_per_request": dense_bytes_per_req,
+        "pool_utilization_at_capacity": dec.pool_utilization(),
+    }
+    emit("bench_engine_paged_capacity", admitted,
+         f"pool_pages={pool_pages};admitted={admitted};"
+         f"vs_dense={dense_slots};ratio={capacity_ratio:.1f}x (gate ≥ "
+         f"{MIN_PAGED_CAPACITY});"
+         f"kv_bytes_per_req={paged_bytes_per_req:,.0f}"
+         f"/{dense_bytes_per_req:,.0f}")
+
+    # length-skewed flood (mostly short, some near-max_len prompts)
+    # through the cluster: how full the pool actually runs under the
+    # reservation-gated admission path
+    n_requests = 6 if smoke else 12
+    cluster = DisaggregatedCluster(
+        model, params, num_decode=1, slots_per_worker=6, max_len=MAX_LEN,
+        adaptive=False, decode_impl="paged_sdpa", num_pages=12)
+    for i in range(n_requests):
+        n = 48 if i % 4 == 3 else 16            # 3:1 short:long skew
+        toks = [t % cfg.vocab_size for t in template_tokens(i % 8, n)]
+        cluster.submit(ServeRequest(f"u{i}", toks, max_new_tokens=4))
+    cluster.run_until_done()
+    hist = {}
+    for tick in cluster.pool_utilization:
+        for u in tick:
+            key = f"{min(int(u * 10), 9) / 10:.1f}"
+            hist[key] = hist.get(key, 0) + 1
+    utils = [u for tick in cluster.pool_utilization for u in tick]
+    out["flood"] = {
+        "requests": n_requests,
+        "pool_pages": 12,
+        "utilization_histogram": dict(sorted(hist.items())),
+        "mean_pool_utilization": sum(utils) / max(len(utils), 1),
+        "peak_pool_utilization": max(utils, default=0.0),
+    }
+    emit("bench_engine_pool_utilization",
+         out["flood"]["mean_pool_utilization"] * 100,
+         f"requests={n_requests};mean="
+         f"{out['flood']['mean_pool_utilization']:.2f};"
+         f"peak={out['flood']['peak_pool_utilization']:.2f}")
     return out
 
 
@@ -223,6 +369,14 @@ def check_regression(payload: dict, baseline_path: str,
     if speedup < MIN_PREFILL_SPEEDUP:
         failures.append(f"prefill.batched_speedup: {speedup:.2f} < "
                         f"required {MIN_PREFILL_SPEEDUP}x")
+    capacity = payload["paged"]["capacity_ratio"]
+    if capacity < MIN_PAGED_CAPACITY:
+        failures.append(f"paged.capacity_ratio: {capacity:.2f} < "
+                        f"required {MIN_PAGED_CAPACITY}x")
+    rate = payload["paged"]["rate_ratio"]
+    if rate < MIN_PAGED_RATE:
+        failures.append(f"paged.rate_ratio: {rate:.3f} < "
+                        f"required {MIN_PAGED_RATE}")
     with open(baseline_path) as f:
         base = _flatten(json.load(f))
     cur = _flatten(payload)
@@ -233,7 +387,8 @@ def check_regression(payload: dict, baseline_path: str,
         if leaf.startswith(("batched_speedup", "tokens_per_s",
                             "tokens_per_s_per_slot",
                             "batched_tokens_per_s",
-                            "sequential_tokens_per_s", "mean_busy_fill")):
+                            "sequential_tokens_per_s", "mean_busy_fill",
+                            "capacity_ratio", "rate_ratio")):
             if cur[key] < ref / factor:
                 failures.append(f"{key}: {cur[key]:.2f} < baseline "
                                 f"{ref:.2f} / {factor}")
@@ -246,10 +401,13 @@ def run(smoke: bool = False) -> dict:
         "mode": "smoke" if smoke else "full",
         "model": MODEL_NAME,
         "prefill": bench_prefill(model, params, cfg, smoke=smoke),
+        # window sizing: 3 windows must finish before the longest prompt
+        # (48 tokens) walks into the max_len=96 stop condition
         "decode": bench_decode(model, params, cfg,
-                               steps=8 if smoke else 32),
+                               steps=8 if smoke else 14),
         "occupancy": bench_occupancy(model, params, cfg,
                                      n_requests=8 if smoke else 16),
+        "paged": bench_paged_capacity(model, params, cfg, smoke=smoke),
     }
     save_json("BENCH_engine", payload)
     return payload
@@ -261,8 +419,9 @@ def main() -> None:
                     help="reduced depths/steps (CI guard, not a "
                          "measurement)")
     ap.add_argument("--check", default=None, metavar="BASELINE",
-                    help="enforce the 2x prefill gate and fail on >2x "
-                         "regression vs this baseline JSON")
+                    help="enforce the prefill/paged-capacity/paged-rate "
+                         "gates and fail on >2x regression vs this "
+                         "baseline JSON")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     payload = run(smoke=args.smoke)

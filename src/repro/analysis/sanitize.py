@@ -40,7 +40,10 @@ I7  per-worker ``running`` equals the recomputed admitted-request count.
 On the engine backend (:class:`EngineSanitizer`): I4/I5 plus the
 ``DecodeEngine`` slot lifecycle — reserve only into a free slot, admit
 only into the slot reserved for that request (no stale-KV slot reuse),
-slot table ≡ the cluster's running/placed view at every tick boundary.
+slot table ≡ the cluster's running/placed view at every tick boundary —
+and, for paged decoders, the page-pool invariants: free list ∪ live page
+tables exactly partitions the pool (P1), no page owned by two live slots
+(P2), released slots hold zero pages (P3).
 """
 from __future__ import annotations
 
@@ -354,7 +357,7 @@ class EngineSanitizer:
         orig_reserve, orig_admit, orig_release = (
             dec.reserve, dec.admit, dec.release)
 
-        def reserve(slot, request_id):
+        def reserve(slot, request_id, prompt_len=None, max_new=0):
             s = dec.slots[slot]
             if s.active:
                 self.trace.fail(
@@ -362,7 +365,11 @@ class EngineSanitizer:
                     f"worker {wid}: reserving slot {slot} for "
                     f"{request_id!r} while it is held by {s.request_id!r}")
             self.trace.add(f"reserve w{wid}/s{slot} <- {request_id!r}")
-            out = orig_reserve(slot, request_id)
+            if prompt_len is None:
+                out = orig_reserve(slot, request_id)
+            else:
+                out = orig_reserve(slot, request_id, prompt_len=prompt_len,
+                                   max_new=max_new)
             self.reserved[(wid, slot)] = request_id
             return out
 
@@ -434,6 +441,76 @@ class EngineSanitizer:
                          f"at {where}: worker {dec.worker_id} slot {i} "
                          f"active for {s.request_id!r} but neither running "
                          f"nor reserved — leaked slot")
+            self._check_pages(dec, where)
+
+    def _check_pages(self, dec, where: str) -> None:
+        """Paged-KV invariants over one decoder's allocator (dense
+        decoders have no allocator and skip):
+
+        P1  free list ∪ live page tables exactly partitions the pool
+            (every allocatable page is free or owned, never both, and the
+            trash page 0 never circulates);
+        P2  no page is owned by two live slots;
+        P3  released (inactive) slots hold zero pages.
+        """
+        alloc = getattr(dec, "allocator", None)
+        if alloc is None:
+            return
+        fail = self.trace.fail
+        wid = dec.worker_id
+
+        held: List[int] = []
+        for slot, pages in alloc.owned.items():
+            held.extend(pages)
+            dups = {p for p in pages if pages.count(p) > 1}
+            if dups:
+                fail("P2 page double-own",
+                     f"at {where}: worker {wid} slot {slot} maps page(s) "
+                     f"{sorted(dups)} more than once")
+        seen: Dict[int, int] = {}
+        for slot, pages in alloc.owned.items():
+            for p in pages:
+                if p in seen and seen[p] != slot:
+                    fail("P2 page double-own",
+                         f"at {where}: worker {wid} page {p} owned by both "
+                         f"slot {seen[p]} and slot {slot} — one request "
+                         f"would decode over another's KV")
+                seen[p] = slot
+
+        for slot, pages in alloc.owned.items():
+            s = dec.slots[slot] if slot < len(dec.slots) else None
+            if s is None or not s.active:
+                fail("P3 released-slot pages",
+                     f"at {where}: worker {wid} slot {slot} is released "
+                     f"but still holds {len(pages)} page(s) "
+                     f"{sorted(pages)} — leaked pool capacity")
+
+        free = alloc.free_list()
+        if len(set(free)) != len(free):
+            fail("P1 page-pool partition",
+                 f"at {where}: worker {wid} free list holds duplicates")
+        free_set, held_set = set(free), set(held)
+        if 0 in free_set or 0 in held_set:
+            fail("P1 page-pool partition",
+                 f"at {where}: worker {wid} trash page 0 entered "
+                 f"circulation")
+        both = free_set & held_set
+        if both:
+            fail("P1 page-pool partition",
+                 f"at {where}: worker {wid} page(s) {sorted(both)} are "
+                 f"simultaneously free and owned")
+        covered = free_set | held_set
+        missing = alloc.all_pages() - covered
+        extra = covered - alloc.all_pages()
+        if missing or extra:
+            fail("P1 page-pool partition",
+                 f"at {where}: worker {wid} free ∪ owned ≠ pool "
+                 f"(missing={sorted(missing)}, foreign={sorted(extra)})")
+        if alloc.reserved_pages > len(free):
+            fail("P1 page-pool partition",
+                 f"at {where}: worker {wid} reservations "
+                 f"({alloc.reserved_pages}) exceed the free list "
+                 f"({len(free)})")
 
 
 def attach_engine_sanitizer(cluster) -> EngineSanitizer:

@@ -1,0 +1,2 @@
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    gather_pages, paged_attention)

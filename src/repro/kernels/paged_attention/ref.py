@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for paged decode attention: gather pages to a dense
+per-slot view, then run the dense masked-softmax decode oracle."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def gather_pages(pool, page_table):
+    """pool: (N, block, K, hd); page_table: (B, W) int32.  Returns the dense
+    per-slot view (B, W*block, K, hd) — positions past a slot's length hold
+    whatever the referenced pages hold (callers mask by length)."""
+    n, block = pool.shape[0], pool.shape[1]
+    table = jnp.clip(page_table.astype(jnp.int32), 0, n - 1)
+    b, w = table.shape
+    return pool[table].reshape(b, w * block, *pool.shape[2:])
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, lengths):
+    """q: (B,H,hd); k_pool, v_pool: (N, block, K, hd); page_table: (B, W);
+    lengths: (B,).  Returns (B,H,hd); rows with ``length == 0`` return
+    zeros, matching the Pallas kernel's empty-softmax convention."""
+    block = k_pool.shape[1]
+    w = page_table.shape[1]
+    k = gather_pages(k_pool, page_table)
+    v = gather_pages(v_pool, page_table)
+    lengths = jnp.minimum(lengths.astype(jnp.int32), w * block)
+    return decode_attention_ref(q, k, v, lengths)

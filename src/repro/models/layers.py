@@ -139,20 +139,28 @@ def _sdpa_chunked(q, k, v, qpos, q_per_kv, *, kind, kv_lengths=None,
 
 def attention(params, x, cfg, *, positions=None, kv_cache=None, write_index=None,
               kv_source=None, causal=True, kv_lengths=None, use_rope=True,
-              use_flash=False, decode_impl="sdpa"):
+              use_flash=False, decode_impl="sdpa", page_table=None):
     """General GQA attention.
 
     x: (B,S,D) hidden states.
     positions: (S,) or (B,S) int32 query positions (for RoPE + causal mask).
     kv_cache: dict(k=(B,T,K,hd), v=...) — decode / incremental mode. K/V for
         the current tokens are written at ``write_index``; attention spans the
-        whole cache masked by position.
+        whole cache masked by position.  Under a paged ``decode_impl`` the
+        cache is instead the global page pool dict(k=(N,block,K,hd), v=...)
+        indirected through ``page_table``.
     kv_source: (B,T,D) — cross-attention keys/values come from here.
     kv_lengths: (B,) valid KV length per batch row (cross / cache masking).
     decode_impl: "sdpa" (XLA einsum path) or "pallas" — on a single-token
         cached step the Pallas ragged decode-attention kernel streams the KV
         cache once, masked per-row by the (B,) position vector (TPU-compiled;
         interpret mode on CPU).  Multi-token calls always use the XLA path.
+        "paged" / "paged_sdpa" use the page-pool layout: "paged" runs the
+        Pallas paged-attention kernel (page-table-indirected block loads),
+        "paged_sdpa" gathers the slot's pages into a dense view and reuses
+        the XLA causal path (bit-compatible with "sdpa", CPU-meaningful).
+    page_table: (B, W) int32 page ids per slot (paged decode only).
+        Unmapped entries point at the trash page 0 and are masked by length.
     Returns (out, new_kv_cache_or_None).
     """
     b, s, d = x.shape
@@ -170,6 +178,51 @@ def attention(params, x, cfg, *, positions=None, kv_cache=None, write_index=None
         cos, sin = rope_table(positions, hd, cfg.rope_theta)
         q = apply_rope(q, cos, sin)
         k = apply_rope(k, cos, sin)
+
+    if positions is None:
+        qp = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    elif positions.ndim == 1:
+        qp = jnp.broadcast_to(positions[None].astype(jnp.int32), (b, s))
+    else:
+        qp = positions.astype(jnp.int32)
+
+    if kv_cache is not None and decode_impl in ("paged", "paged_sdpa"):
+        # Paged single-token decode: the cache is the global page pool
+        # (N, block, K, hd); row b's KV position p lives in
+        # pool[page_table[b, p // block], p % block].  Write this step's
+        # K/V at the slot's current position (inactive rows sit at
+        # position 0 with an all-trash table row, so their writes land in
+        # the reserved trash page 0 and are masked by length), then attend
+        # over the slot's pages up to kv_pos <= q_pos.
+        if s != 1:
+            raise ValueError("paged decode handles single-token steps only")
+        if page_table is None:
+            raise ValueError(f"decode_impl={decode_impl!r} needs a page_table")
+        k = shard(k, "decode_batch", None, "kv_heads", "kv_head_dim")
+        v = shard(v, "decode_batch", None, "kv_heads", "kv_head_dim")
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        block = ck.shape[1]
+        table = jnp.asarray(page_table, jnp.int32)
+        pos = qp[:, 0]
+        page = table[jnp.arange(b, dtype=jnp.int32), pos // block]
+        off = pos % block
+        ck = ck.at[page, off].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[page, off].set(v[:, 0].astype(cv.dtype))
+        new_cache = {"k": ck, "v": cv}
+        lengths = pos + 1
+        if decode_impl == "paged":
+            from repro.kernels.paged_attention import ops as paged_ops
+            out = paged_ops.paged_attention(
+                q[:, 0], ck, cv, table, lengths)[:, None]
+        else:
+            from repro.kernels.paged_attention.ref import gather_pages
+            kd = gather_pages(ck, table).astype(COMPUTE_DTYPE)
+            vd = gather_pages(cv, table).astype(COMPUTE_DTYPE)
+            out = _sdpa_chunked(q, kd, vd, qp, cfg.q_heads_per_kv,
+                                kind="causal")
+        out = jnp.einsum("bshk,hkd->bsd", out,
+                         params["wo"].astype(COMPUTE_DTYPE))
+        return shard(out, "batch", "seq", "act_embed"), new_cache
 
     new_cache = None
     if kv_cache is not None:
@@ -197,13 +250,6 @@ def attention(params, x, cfg, *, positions=None, kv_cache=None, write_index=None
             cv = jnp.where(sel, v.astype(cv.dtype), cv)
         new_cache = {"k": ck, "v": cv}
         k, v = ck.astype(COMPUTE_DTYPE), cv.astype(COMPUTE_DTYPE)
-
-    if positions is None:
-        qp = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    elif positions.ndim == 1:
-        qp = jnp.broadcast_to(positions[None].astype(jnp.int32), (b, s))
-    else:
-        qp = positions.astype(jnp.int32)
 
     if kv_cache is not None:
         if decode_impl == "pallas" and s == 1:
@@ -241,6 +287,17 @@ def attention_cache_init(cfg, batch, max_len, dtype=COMPUTE_DTYPE):
     return {
         "k": jnp.zeros((batch, max_len, k, hd), dtype),
         "v": jnp.zeros((batch, max_len, k, hd), dtype),
+    }
+
+
+def paged_attention_cache_init(cfg, num_pages, block, dtype=COMPUTE_DTYPE):
+    """Global KV page pool shared by every decode slot.  ``num_pages`` must
+    include the reserved trash page 0 (the engine allocates pool size
+    ``allocatable + 1``)."""
+    k, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((num_pages, block, k, hd), dtype),
+        "v": jnp.zeros((num_pages, block, k, hd), dtype),
     }
 
 

@@ -139,7 +139,8 @@ class Model:
     # ------------------------------------------------------------ blocks ----
 
     def _block_apply(self, desc, bp, x, bc, *, positions, write_index,
-                     enc_out, causal=True, decode_impl="sdpa"):
+                     enc_out, causal=True, decode_impl="sdpa",
+                     page_table=None):
         """Apply one block. bc (the block cache) is None in train mode.
         Returns (x, new_block_cache, moe_aux or None)."""
         cfg = self.cfg
@@ -150,7 +151,8 @@ class Model:
                                 kv_cache=bc.get("kv") if bc else None,
                                 write_index=write_index, causal=causal,
                                 use_flash=self.use_flash,
-                                decode_impl=decode_impl)
+                                decode_impl=decode_impl,
+                                page_table=page_table)
             if bc is not None:
                 nc["kv"] = kv
             x = x + h
@@ -203,7 +205,7 @@ class Model:
 
     def _run_stack(self, stack, x, *, caches=None, positions=None,
                    write_index=None, enc_out=None, causal=True, remat=False,
-                   decode_impl="sdpa"):
+                   decode_impl="sdpa", page_table=None):
         """lax.scan over periods. Returns (x, new_caches_or_None, aux_sum)."""
         collect = caches is not None
 
@@ -217,7 +219,7 @@ class Model:
                 xx, ncb, aux = self._block_apply(
                     desc, pp[f"p{i}"], xx, bc, positions=positions,
                     write_index=write_index, enc_out=enc_out, causal=causal,
-                    decode_impl=decode_impl)
+                    decode_impl=decode_impl, page_table=page_table)
                 new_c[f"p{i}"] = ncb
                 if aux is not None:
                     aux_sum = aux_sum + aux["moe_aux_loss"]
@@ -314,6 +316,34 @@ class Model:
         if abstract:
             return jax.eval_shape(build)
         return build()
+
+    def paged_cache_init(self, num_pages, block, abstract=False):
+        """Global KV page-pool pytree for paged decode: same per-period
+        structure as :meth:`cache_init`, but every "kv" leaf is a page pool
+        ``(num_pages + 1, block, K, hd)`` shared by all slots — the +1 is
+        the reserved trash page 0 (inactive slots write there; never
+        allocated).  Attention-only stacks, see
+        :attr:`supports_paged_decode`."""
+        assert self.supports_paged_decode, self.cfg.name
+        def build():
+            per = {f"p{i}": {"kv": L.paged_attention_cache_init(
+                        self.cfg, num_pages + 1, block)}
+                   for i in range(len(self.descs))}
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (self.n_periods,) + a.shape)
+                          + jnp.zeros((), a.dtype), per)
+        if abstract:
+            return jax.eval_shape(build)
+        return build()
+
+    @property
+    def supports_paged_decode(self) -> bool:
+        """The paged KV layout holds every sequence mixer's decode state in
+        the shared page pool, so (like padded prefill) it requires a pure
+        causal-attention stack: recurrent mixers carry dense per-slot state
+        that has no block-granular form."""
+        return (all(d.mixer == "attn" and not d.cross for d in self.descs)
+                and self.cfg.family not in ("encdec", "vlm"))
 
     def prefill(self, params, batch, max_len=None):
         """Process the prompt; returns (last_logits (B,V), caches)."""
@@ -433,13 +463,18 @@ class Model:
             return out
         return jax.vmap(fill, in_axes=(0, 0))(params["stack"], caches)
 
-    def decode(self, params, caches, tokens, cur_index, decode_impl="sdpa"):
+    def decode(self, params, caches, tokens, cur_index, decode_impl="sdpa",
+               page_table=None):
         """One decode step. tokens: (B,1) int32; cur_index: scalar int32, or
         an int32 (B,) vector for ragged continuous batching.
 
         ``decode_impl="pallas"`` routes the cached-attention step through
         the Pallas ragged decode kernel (per-row length masking from the
-        position vector); ``"sdpa"`` keeps the XLA einsum path."""
+        position vector); ``"sdpa"`` keeps the XLA einsum path.  The paged
+        impls ("paged" — Pallas paged kernel — and "paged_sdpa" — gathered
+        dense XLA path) expect ``caches`` from :meth:`paged_cache_init` and
+        a ``page_table`` (B, W) int32 mapping each slot's KV blocks into
+        the shared page pool."""
         cfg = self.cfg
         x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
         x = shard(x, "decode_batch", None, "act_embed")
@@ -450,7 +485,7 @@ class Model:
             positions = cur[:, None]
         x, new_caches, _ = self._run_stack(
             params["stack"], x, caches=caches, positions=positions,
-            write_index=cur, decode_impl=decode_impl)
+            write_index=cur, decode_impl=decode_impl, page_table=page_table)
         x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = jnp.einsum("bsd,dv->bsv", x,
                             params["unembed"].astype(L.COMPUTE_DTYPE))

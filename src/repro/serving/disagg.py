@@ -88,6 +88,7 @@ class DisaggregatedCluster:
                  batch_prefill: bool = True,
                  max_prefill_batch: int = 8,
                  decode_impl: str = "pallas",
+                 num_pages: Optional[int] = None,
                  control: Optional[ControlPlane] = None,
                  sanitize: Optional[bool] = None):
         self.model = model
@@ -95,9 +96,13 @@ class DisaggregatedCluster:
         self.prefill = PrefillEngine(model, params, max_len,
                                      cache_entries=prefill_cache_entries,
                                      max_batch=max_prefill_batch)
+        # num_pages sizes each paged decoder's KV page pool (None = the
+        # dense worst case, where the page gate never binds); dense impls
+        # ignore it.
         self.decoders = [DecodeEngine(model, params, slots_per_worker,
                                       max_len, worker_id=i,
-                                      decode_impl=decode_impl)
+                                      decode_impl=decode_impl,
+                                      num_pages=num_pages)
                          for i in range(num_decode)]
         self.control = control or ControlPlane(
             num_decode,
@@ -120,8 +125,11 @@ class DisaggregatedCluster:
         self.done: List[ServeRequest] = []
         # per-tick decode occupancy snapshot (active slots per worker),
         # recorded by step(): the batch-occupancy observable
-        # bench_engine_throughput histograms
+        # bench_engine_throughput histograms.  pool_utilization mirrors it
+        # for paged decoders (fraction of each worker's page pool mapped
+        # to live slots); empty for dense layouts.
         self.occupancy: List[Tuple[int, ...]] = []
+        self.pool_utilization: List[Tuple[float, ...]] = []
         self._t0 = time.monotonic()
 
         # Opt-in runtime coherence sanitizer (repro.analysis.sanitize):
@@ -162,15 +170,20 @@ class DisaggregatedCluster:
                 rid=req.request_id, record=False)
             dec = self.decoders[worker]
             slot = dec.free_slot()
-            if slot is None:
-                still.append(req)  # backpressure: retry next tick
+            if slot is None or not dec.can_admit(len(req.tokens),
+                                                 req.max_new_tokens):
+                # backpressure: no slot row, or (paged) the request's
+                # worst-case page count is not coverable — retry next tick
+                still.append(req)
                 continue
             self.control.log_decision(req.request_id, worker, overlap, now)
             # reserve before the next request routes, so one tick's
-            # placements see consistent slot accounting; the jitted
+            # placements see consistent slot accounting (paged engines
+            # also reserve the worst-case page count here); the jitted
             # compute for ALL of this tick's placements runs as one
             # bucketed prompt pass below.
-            dec.reserve(slot, req.request_id)
+            dec.reserve(slot, req.request_id, prompt_len=len(req.tokens),
+                        max_new=req.max_new_tokens)
             self.control.router.on_schedule(worker, req.tokens,
                                             now=self._now(),
                                             hashes=req.hashes)
@@ -207,6 +220,9 @@ class DisaggregatedCluster:
         Returns number of completed requests this tick."""
         self._try_schedule()
         self.occupancy.append(tuple(d.active_count for d in self.decoders))
+        if any(d.paged for d in self.decoders):
+            self.pool_utilization.append(
+                tuple(d.pool_utilization() for d in self.decoders))
         completed = 0
         for dec in self.decoders:
             for rid, tok, done in dec.step():

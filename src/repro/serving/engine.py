@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.radix import BLOCK_SIZE, block_hashes
 from repro.models.model import Model
+from repro.serving.paging import PageAllocator
 
 
 @dataclass
@@ -395,6 +396,9 @@ class Slot:
     max_new: int = 0
 
 
+PAGED_IMPLS = ("paged", "paged_sdpa")
+
+
 class DecodeEngine:
     """Fixed-slot continuous batcher around the jitted ragged decode step.
 
@@ -402,12 +406,27 @@ class DecodeEngine:
     (default) streams the KV cache through the ragged Pallas decode kernel
     on the per-slot lengths vector (TPU-compiled, interpret mode on CPU);
     ``"sdpa"`` keeps the XLA einsum reference path — the two are pinned
-    token-stream identical by ``tests/test_engine_batching.py``."""
+    token-stream identical by ``tests/test_engine_batching.py``.
+
+    The paged impls swap the dense per-slot ``max_len`` KV layout for a
+    global page pool of ``num_pages`` KV blocks plus a per-slot page table:
+    ``"paged"`` runs the Pallas paged-attention kernel (page-table-
+    indirected block loads), ``"paged_sdpa"`` gathers the slot's pages into
+    a dense view and reuses the XLA causal path.  Admission is then gated
+    on *free pages* (:meth:`can_admit`) instead of free slots alone, the
+    jitted step grows a slot's table when generation crosses a block
+    boundary, and :meth:`release` returns the pages to the free list — so
+    the same KV HBM budget sustains many more concurrent short/medium
+    requests.  ``num_pages=None`` sizes the pool to the dense worst case
+    ``num_slots * ceil(max_len / block)``, where the page gate can never
+    bind and the admission stream is identical to the dense layout's."""
 
     def __init__(self, model: Model, params, num_slots: int, max_len: int,
                  worker_id: int = 0, resident_blocks: int = 4096,
-                 decode_impl: str = "pallas"):
-        if decode_impl not in ("pallas", "sdpa"):
+                 decode_impl: str = "pallas",
+                 num_pages: Optional[int] = None,
+                 page_block: int = BLOCK_SIZE):
+        if decode_impl not in ("pallas", "sdpa") + PAGED_IMPLS:
             raise ValueError(f"unknown decode_impl {decode_impl!r}")
         self.model = model
         self.params = params
@@ -415,9 +434,31 @@ class DecodeEngine:
         self.max_len = max_len
         self.worker_id = worker_id
         self.decode_impl = decode_impl
+        self.paged = decode_impl in PAGED_IMPLS
         self.slots = [Slot() for _ in range(num_slots)]
-        self.caches = model.cache_init(num_slots, max_len)
         self.tokens = np.zeros((num_slots, 1), np.int32)
+        if self.paged:
+            if not model.supports_paged_decode:
+                raise ValueError(
+                    f"{model.cfg.name} has non-attention mixers; paged KV "
+                    "needs a pure causal-attention stack")
+            self.page_block = page_block
+            self.max_pages_per_slot = -(-max_len // page_block)
+            if num_pages is None:
+                num_pages = num_slots * self.max_pages_per_slot
+            self.allocator = PageAllocator(num_pages, page_block)
+            self.caches = model.paged_cache_init(num_pages, page_block)
+            # page table starts one page wide and widens along the
+            # power-of-two ladder as slots grow (each width is one jit
+            # specialization of the decode step; warmup can pre-compile
+            # the ladder).  Unmapped entries stay 0 — the trash page.
+            self.page_table = np.zeros((num_slots, 1), np.int32)
+            self._adopt = jax.jit(
+                functools.partial(adopt_prefill_pages, block=page_block),
+                donate_argnums=0)
+        else:
+            self.allocator = None
+            self.caches = model.cache_init(num_slots, max_len)
         self._decode = jax.jit(
             functools.partial(model.decode, decode_impl=decode_impl),
             donate_argnums=1)
@@ -451,15 +492,96 @@ class DecodeEngine:
             self._resident.popitem(last=False)
         return new
 
-    def reserve(self, slot: int, request_id: str) -> None:
+    # ------------------------------------------------------------- paging ---
+
+    def pages_for_request(self, prompt_len: int, max_new: int) -> int:
+        """Worst-case page count of a request: prompt + every generated
+        token + the admission first-token write, capped by the engine's
+        ``max_len`` stop condition."""
+        total = min(prompt_len + max_new + 1, self.max_len)
+        return self.allocator.pages_for(total)
+
+    def pages_for_prompt(self, prompt_len: int) -> int:
+        """Pages mapped at admit time: the prompt plus one position for the
+        first generated token's KV write."""
+        return self.allocator.pages_for(min(prompt_len + 1, self.max_len))
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        """Admission gate: dense layouts admit on slots alone; the paged
+        layout additionally requires the request's worst-case page count to
+        be coverable by pages not promised to already-scheduled slots."""
+        if not self.paged:
+            return True
+        return self.allocator.can_admit(
+            self.pages_for_request(prompt_len, max_new))
+
+    def _table_width(self, n_pages: int) -> int:
+        """Page-table width holding ``n_pages``: next power of two, capped
+        at the ``max_len`` worst case — keeps the jitted decode shape set
+        O(log max_pages_per_slot)."""
+        w = 1
+        while w < n_pages:
+            w *= 2
+        return min(w, self.max_pages_per_slot)
+
+    def width_ladder(self, total_tokens: Optional[int] = None) -> List[int]:
+        """Every page-table width a run can emit, widest bounded by
+        ``total_tokens`` (prompt + generated; None = the ``max_len`` worst
+        case) — the warmup pre-compile set for the decode step."""
+        top = self.max_pages_per_slot if total_tokens is None else \
+            self._table_width(self.allocator.pages_for(
+                min(total_tokens, self.max_len)))
+        ladder, w = [], 1
+        while w < top:
+            ladder.append(w)
+            w *= 2
+        ladder.append(top)
+        return ladder
+
+    def _widen_table(self, width: int) -> None:
+        if width > self.page_table.shape[1]:
+            pad = width - self.page_table.shape[1]
+            self.page_table = np.pad(self.page_table, ((0, 0), (0, pad)))
+
+    def kv_bytes_held(self) -> int:
+        """KV HBM bytes currently committed to requests: dense layouts
+        commit every slot's full ``max_len`` rows up front; the paged pool
+        commits only mapped pages."""
+        if self.paged:
+            tokens = self.allocator.used_pages * self.page_block
+        else:
+            tokens = self.num_slots * self.max_len
+        return tokens * kv_token_bytes(self.model)
+
+    def pool_utilization(self) -> float:
+        """Fraction of the page pool currently mapped to live slots
+        (dense layouts are always fully committed)."""
+        if not self.paged:
+            return 1.0
+        return self.allocator.used_pages / max(1, self.allocator.num_pages)
+
+    # -------------------------------------------------------------- admit ---
+
+    def reserve(self, slot: int, request_id: str,
+                prompt_len: Optional[int] = None,
+                max_new: int = 0) -> None:
         """Claim ``slot`` for ``request_id`` before its (batched) prefill
         has produced a cache bundle, so a scheduler placing several
         requests in one tick sees consistent ``free_slot`` accounting.
         A reserved-but-unadmitted slot holds no cache state: :meth:`step`
         skips it until :meth:`admit` lands (or :meth:`release` frees
-        it)."""
+        it).
+
+        On a paged engine, passing ``prompt_len`` also reserves the
+        request's worst-case page count, so several reservations in one
+        scheduling tick cannot double-count the same free pages (gate with
+        :meth:`can_admit` first)."""
         s = self.slots[slot]
         assert not s.active, (slot, s.request_id)
+        if self.paged and prompt_len is not None:
+            ok = self.allocator.reserve(
+                slot, self.pages_for_request(prompt_len, max_new))
+            assert ok, (slot, "reserve() without a can_admit() gate")
         s.active = True
         s.request_id = request_id
 
@@ -475,9 +597,33 @@ class DecodeEngine:
         move — the per-block charge of the prefill→decode hop.  Blocks
         already resident (an earlier request of the same template landed
         here) ride for free; that asymmetry is the cache-affinity
-        externality on the real path."""
-        self.caches = _insert_cache(self.caches, prefill_caches, slot,
-                                    self.model, src_row=src_row)
+        externality on the real path.
+
+        Paged engines map the prompt's pages from the free list (plus one
+        position for the first token's KV write) and scatter the prefill
+        KV into them at block granularity; the rest of the request's
+        worst case stays reserved for mid-generation :meth:`step` growth.
+        Callers that skipped :meth:`reserve` must gate on
+        :meth:`can_admit` — an ungated paged admit raises."""
+        if self.paged:
+            n_map = self.pages_for_prompt(prompt_len)
+            pages = self.allocator.admit(
+                slot, n_map, self.pages_for_request(prompt_len, max_new))
+            if pages is None:
+                raise RuntimeError(
+                    f"page pool exhausted admitting {request_id!r} to slot "
+                    f"{slot}: gate admission on can_admit()")
+            self._widen_table(self._table_width(len(pages)))
+            self.page_table[slot, :] = 0
+            self.page_table[slot, :len(pages)] = pages
+            row = jax.tree.map(
+                lambda a: jax.lax.slice_in_dim(a, src_row, src_row + 1,
+                                               axis=1), prefill_caches)
+            self.caches = self._adopt(self.caches, row,
+                                      jnp.asarray(pages, jnp.int32))
+        else:
+            self.caches = _insert_cache(self.caches, prefill_caches, slot,
+                                        self.model, src_row=src_row)
         s = self.slots[slot]
         s.active = True
         s.request_id = request_id
@@ -490,6 +636,9 @@ class DecodeEngine:
         return moved
 
     def release(self, slot: int):
+        if self.paged:
+            self.allocator.release(slot)
+            self.page_table[slot, :] = 0
         self.slots[slot] = Slot()
         self.tokens[slot, 0] = 0
 
@@ -497,12 +646,27 @@ class DecodeEngine:
     def active_count(self) -> int:
         return sum(s.active for s in self.slots)
 
-    def warmup(self) -> None:
+    def warmup(self, table_widths: Optional[Sequence[int]] = None) -> None:
         """Pre-compile the jitted decode step (slots all inactive; whatever
-        the pass writes is fully overwritten on the next ``admit``)."""
+        the pass writes is fully overwritten on the next ``admit``).
+
+        On a paged engine, ``table_widths`` lists the page-table widths to
+        pre-compile (each width is its own decode-step shape — the
+        page-growth recompile points; see :meth:`width_ladder`).  The live
+        table keeps its current width; pre-compiled shapes are hit when
+        growth widens it later."""
         lengths = jnp.zeros((self.num_slots,), jnp.int32)
-        _, self.caches = self._decode(self.params, self.caches,
-                                      jnp.asarray(self.tokens), lengths)
+        if not self.paged:
+            _, self.caches = self._decode(self.params, self.caches,
+                                          jnp.asarray(self.tokens), lengths)
+            return
+        widths = sorted({int(w) for w in (table_widths or ())}
+                        | {self.page_table.shape[1]})
+        for w in widths:
+            table = jnp.zeros((self.num_slots, w), jnp.int32)
+            _, self.caches = self._decode(self.params, self.caches,
+                                          jnp.asarray(self.tokens), lengths,
+                                          page_table=table)
 
     # --------------------------------------------------------------- step ---
 
@@ -519,8 +683,25 @@ class DecodeEngine:
         # output is skipped below
         lengths = jnp.asarray([s.length if s.active else 0
                                for s in self.slots], jnp.int32)
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(self.tokens), lengths)
+        if self.paged:
+            # growth pre-pass: this tick writes each admitted slot's KV at
+            # position s.length — if that crosses into an unmapped block,
+            # map one page from the slot's reservation (and widen the
+            # table to the next ladder width when the row is full).
+            for i, s in enumerate(self.slots):
+                if not s.active or not s.generated:
+                    continue
+                j = s.length // self.page_block
+                if j >= len(self.allocator.owned[i]):
+                    page = self.allocator.grow(i)
+                    self._widen_table(self._table_width(j + 1))
+                    self.page_table[i, j] = page
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(self.tokens), lengths,
+                page_table=jnp.asarray(self.page_table))
+        else:
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(self.tokens), lengths)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         out = []
         for i, s in enumerate(self.slots):
@@ -536,6 +717,39 @@ class DecodeEngine:
             if done:
                 self.release(i)   # slot is re-admittable this same tick
         return out
+
+
+def kv_token_bytes(model: Model) -> int:
+    """KV HBM bytes per cached token position (all layers, K and V)."""
+    cfg = model.cfg
+    n_attn = sum(d.mixer == "attn" for d in model.descs) * model.n_periods
+    itemsize = jnp.dtype(jnp.bfloat16).itemsize
+    return 2 * n_attn * cfg.num_kv_heads * cfg.resolved_head_dim * itemsize
+
+
+def adopt_prefill_pages(pool, row_bundle, page_ids, *, block: int):
+    """Scatter one prefill cache row into freshly mapped pool pages.
+
+    ``pool``: paged cache pytree (leaves ``(P, N, block, K, hd)``);
+    ``row_bundle``: a single-row prefill bundle (leaves ``(P, 1, S, K, hd)``
+    — callers slice ``src_row`` out first so the jit specializes on the
+    page count, not the prefill batch width); ``page_ids``: (n,) int32
+    destination pages.  The row's first ``n * block`` positions land in the
+    pages in order (right-padded with zeros when the prefill sequence axis
+    is shorter; positions past the prompt are masked by length and
+    overwritten by decode before any query reaches them)."""
+    n = page_ids.shape[0]
+    def leaf(d, s):
+        src = s[:, 0]                                     # (P, S, ...)
+        need = n * block
+        if src.shape[1] < need:
+            pads = [(0, 0), (0, need - src.shape[1])]
+            pads += [(0, 0)] * (src.ndim - 2)
+            src = jnp.pad(src, pads)
+        blocks = src[:, :need].reshape(
+            (src.shape[0], n, block) + src.shape[2:])
+        return d.at[:, page_ids].set(blocks.astype(d.dtype))
+    return jax.tree.map(leaf, pool, row_bundle)
 
 
 def _insert_cache(dst, src, slot: int, model: Model, src_row: int = 0):

@@ -191,7 +191,28 @@ class EngineScenarioRunner:
         # per decoder (empty hash list: no residency/transfer pollution)
         caches = self.cluster.prefill.dummy_caches(lengths[-1])
         for dec in self.cluster.decoders:
-            dec.warmup()
+            if dec.paged:
+                # paged decode recompiles per page-table width: pre-compile
+                # every ladder width up to the widest table this run's
+                # longest (prompt + output) span can grow a slot to, so a
+                # mid-run block-boundary crossing never pays a compile wall
+                span = max((len(s.tokens) + s.max_new + 1
+                            for s in self.specs), default=lengths[-1] + 2)
+                dec.warmup(table_widths=dec.width_ladder(span))
+                # the adopt scatter compiles per mapped-page count: one
+                # dummy admit+release per distinct count the prompts map
+                reps = {}
+                for n in lengths:
+                    reps.setdefault(dec.pages_for_prompt(n), n)
+                top = dec.pages_for_prompt(lengths[-1])
+                for n_map, n in sorted(reps.items()):
+                    if n_map == top:
+                        continue    # covered by the shared admit below
+                    dec.admit(0, "__warmup__", caches, 0,
+                              prompt_len=n, max_new=1, hashes=())
+                    dec.release(0)
+            else:
+                dec.warmup()
             dec.admit(0, "__warmup__", caches, 0,
                       prompt_len=lengths[-1], max_new=1, hashes=())
             dec.step()                      # done=True → slot auto-released

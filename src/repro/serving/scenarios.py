@@ -142,7 +142,7 @@ _ENGINE_KEYS = {"model_name", "num_requests", "input_tokens",
                 "detector_config", "routing_policy", "cache_ttl",
                 "prefill_cache_entries", "kv_transfer_per_block",
                 "batch_prefill", "max_prefill_batch", "decode_impl",
-                "sanitize"}
+                "num_pages", "sanitize"}
 
 
 def build_backend(name: str, backend: str = "analytic", seed: int = 0,

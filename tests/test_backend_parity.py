@@ -56,6 +56,8 @@ def _engine(reduced_model, **kw):
     pytest.param(dict(batch_prefill=True, decode_impl="pallas"), id="fast"),
     pytest.param(dict(batch_prefill=False, decode_impl="sdpa"),
                  id="reference"),
+    pytest.param(dict(batch_prefill=True, decode_impl="paged_sdpa"),
+                 id="paged"),
 ])
 @pytest.mark.parametrize("name", PARITY_SCENARIOS)
 def test_backends_agree_on_decisions_and_regimes(name, engine_mode,

@@ -27,6 +27,9 @@ from repro.kernels.decode_attention.ops import decode_attention  # noqa: E402
 from repro.kernels.decode_attention.ref import decode_attention_ref  # noqa: E402
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: E402
 from repro.kernels.flash_attention.ref import flash_attention_ref  # noqa: E402
+from repro.kernels.paged_attention.ops import (  # noqa: E402
+    gather_pages, paged_attention)
+from repro.kernels.paged_attention.ref import paged_attention_ref  # noqa: E402
 
 # interpret-mode kernels are slow and compile per shape: few, surgical
 # examples with no deadline (first example pays the jit wall)
@@ -75,6 +78,58 @@ def test_decode_matches_ref_property(seed, t, kh, g, raw_lengths):
     # inactive rows (length 0) must be finite zeros, never NaN
     zero = np.asarray(out)[np.asarray(lengths) == 0]
     assert np.all(zero == 0.0)
+
+
+# tokens per KV page in the paged suite — small so examples stay fast while
+# partial-last-page and page-boundary lengths remain reachable
+PAGE_BLK = 16
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 2**31 - 1),
+       w=st.integers(1, 5),                   # pages_per_slot (table width)
+       extra_pages=st.integers(0, 6),         # pool slack beyond the tables
+       kh=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2, 4]),          # q_per_kv: MQA → GQA → MHA
+       raw_lengths=st.lists(st.integers(0, 90), min_size=1, max_size=4))
+@example(seed=0, w=2, extra_pages=1, kh=2, g=2,
+         raw_lengths=[0, 1, PAGE_BLK - 1, PAGE_BLK])   # page-edge lengths
+@example(seed=1, w=3, extra_pages=0, kh=1, g=4,
+         raw_lengths=[PAGE_BLK + 1])                   # partial last page
+@example(seed=2, w=4, extra_pages=2, kh=4, g=1,
+         raw_lengths=[2 * PAGE_BLK - 1, 2 * PAGE_BLK, 2 * PAGE_BLK + 1])
+def test_paged_matches_ref_property(seed, w, extra_pages, kh, g, raw_lengths):
+    """Page-table-indirected decode == dense masked softmax over the
+    gathered pages, for arbitrary (table width, pool assignment, GQA
+    ratio, ragged lengths) — including length 0 (defined as zero output)
+    and lengths ending inside a partial last page.  Tables deliberately
+    include the trash page 0 and shared pages: reads are pure, so any
+    valid page id is legal wherever the length mask hides or allows it."""
+    b, hd = len(raw_lengths), 16
+    n_pages = b * w + 1 + extra_pages            # +1: trash page 0
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (b, kh * g, hd), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (n_pages, PAGE_BLK, kh, hd),
+                               jnp.float32)
+    v_pool = jax.random.normal(ks[2], (n_pages, PAGE_BLK, kh, hd),
+                               jnp.float32)
+    table = jax.random.randint(ks[3], (b, w), 0, n_pages, jnp.int32)
+    lengths = jnp.asarray([min(n, w * PAGE_BLK) for n in raw_lengths],
+                          jnp.int32)
+    out = paged_attention(q, k_pool, v_pool, table, lengths, interpret=True)
+    ref = paged_attention_ref(q, k_pool, v_pool, table, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    # the oracle itself must agree with the dense ragged oracle on the
+    # gathered view — pages are pure indirection, not new semantics
+    dense = decode_attention_ref(q, gather_pages(k_pool, table),
+                                 gather_pages(v_pool, table), lengths)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)
+    # inactive rows (length 0) must be finite zeros, never NaN
+    zero = np.asarray(out)[np.asarray(lengths) == 0]
+    assert np.all(zero == 0.0)
+    assert np.all(np.isfinite(np.asarray(out)))
 
 
 @settings(**COMMON)

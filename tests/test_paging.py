@@ -1,0 +1,193 @@
+"""PageAllocator unit + property tests (pure Python, no JAX).
+
+The deterministic half pins the arithmetic and ordering contracts the
+engine relies on (ceil-div page counts, LIFO reuse determinism, trash
+page exclusion, reserve→admit→grow accounting).  The hypothesis half
+drives random reserve/admit/grow/release schedules and asserts the two
+global invariants every schedule must preserve: no page is ever leaked
+or double-owned (``audit()`` stays empty), and capacity accounting is
+exact — an admission is granted iff the worst case fits in
+``available_pages``, and a drained allocator restores the full pool.
+
+``hypothesis`` is optional (the CI engine lane installs it; the base
+container may not have it) — the property tests skip cleanly when
+missing while the deterministic half always runs.
+"""
+import pytest
+
+from repro.serving.paging import TRASH_PAGE, PageAllocator
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised in base container
+    HAVE_HYPOTHESIS = False
+
+BLOCK = 16
+
+
+# ---------------------------------------------------------- deterministic --
+
+def test_pages_for_ceil_division():
+    a = PageAllocator(8, BLOCK)
+    assert a.pages_for(0) == 1          # a slot always holds ≥ 1 page
+    assert a.pages_for(1) == 1
+    assert a.pages_for(BLOCK) == 1
+    assert a.pages_for(BLOCK + 1) == 2
+    assert a.pages_for(3 * BLOCK) == 3
+    assert a.pages_for(3 * BLOCK + 1) == 4
+
+
+def test_trash_page_never_allocated():
+    a = PageAllocator(4, BLOCK)
+    pages = a.admit(0, 4)
+    assert TRASH_PAGE not in pages
+    assert sorted(pages) == [1, 2, 3, 4]
+    a.release(0)
+    assert TRASH_PAGE not in a.free_list()
+
+
+def test_fresh_pool_hands_out_ascending_then_lifo_reuse():
+    a = PageAllocator(6, BLOCK)
+    assert a.admit(0, 2) == [1, 2]
+    assert a.admit(1, 2) == [3, 4]
+    a.release(0)                         # 1, 2 go to the free-list tail
+    # LIFO: the most recently released page comes back first —
+    # deterministic replay is what makes engine streams reproducible
+    assert a.admit(2, 1) == [2]
+    assert a.admit(3, 2) == [1, 5]
+
+
+def test_reserve_then_admit_accounting():
+    a = PageAllocator(6, BLOCK)
+    assert a.reserve(0, 4)
+    assert a.available_pages == 2        # 6 free − 4 promised
+    # a second same-tick reservation cannot count slot 0's promise
+    assert not a.reserve(1, 3)
+    assert a.reserve(1, 2)
+    assert a.available_pages == 0
+    assert not a.can_admit(1)
+    # admit maps the prompt pages now; the remainder stays reserved
+    pages = a.admit(0, 2, 4)
+    assert len(pages) == 2
+    assert a.used_pages == 2 and a.reserved_pages == 2 + 2
+    # growth draws on the reservation, never on other slots' promises
+    a.grow(0)
+    a.grow(0)
+    assert a.reserved.get(0, 0) == 0 and len(a.owned[0]) == 4
+    # slot 1's promise survived untouched
+    assert a.reserved[1] == 2
+    a.release(0)
+    a.release(1)
+    assert a.free_pages == 6 and a.reserved_pages == 0
+    assert a.audit() == []
+
+
+def test_unreserved_admit_gates_on_worst_case():
+    a = PageAllocator(4, BLOCK)
+    # worst case 5 > pool: refused even though n_map fits
+    assert a.admit(0, 2, 5) is None
+    assert a.free_pages == 4 and a.audit() == []
+    pages = a.admit(0, 2, 4)
+    assert len(pages) == 2 and a.reserved[0] == 2
+
+
+def test_ungated_grow_raises():
+    a = PageAllocator(2, BLOCK)
+    a.admit(0, 2)                        # whole pool, no reservation left
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
+        a.grow(0)
+
+
+def test_release_of_reserve_only_slot():
+    a = PageAllocator(4, BLOCK)
+    a.reserve(0, 3)
+    assert a.release(0) == []
+    assert a.available_pages == 4 and a.audit() == []
+
+
+# --------------------------------------------------------------- property --
+# @given/@settings evaluate at import time, so the whole section lives
+# behind the availability check rather than a per-test skipif
+
+if HAVE_HYPOTHESIS:
+    # each op: (kind, slot, n_map, n_total) — slots from a small id space
+    # so schedules revisit slots across lifecycles
+    _OPS = st.lists(
+        st.tuples(st.sampled_from(["reserve", "admit", "grow", "release"]),
+                  st.integers(0, 3),
+                  st.integers(1, 4),
+                  st.integers(1, 6)),
+        min_size=1, max_size=40)
+
+    @settings(deadline=None, max_examples=200, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(num_pages=st.integers(2, 12), ops=_OPS)
+    def test_random_schedule_never_leaks_or_double_owns(num_pages, ops):
+        """Any interleaving of the lifecycle ops keeps the pool
+        partitioned: audit() stays empty after every op, admissions are
+        granted iff the worst case fits available_pages, grow succeeds
+        whenever admission was gated, and draining all slots restores the
+        exact full pool."""
+        a = PageAllocator(num_pages, BLOCK)
+        for kind, slot, n_map, n_total in ops:
+            n_total = max(n_map, n_total)
+            if kind == "reserve" and slot not in a.owned \
+                    and slot not in a.reserved:
+                pre_avail = a.available_pages
+                ok = a.reserve(slot, n_total)
+                assert ok == (n_total <= pre_avail)
+            elif kind == "admit" and slot not in a.owned:
+                # engine contract: an admitted prompt maps at most the
+                # worst case promised at reserve time
+                if slot in a.reserved:
+                    n_map = min(n_map, a.reserved[slot])
+                # a pre-reserved slot draws on its own promise, so its
+                # own reservation counts as available to it
+                pre_avail = a.available_pages + a.reserved.get(slot, 0)
+                pages = a.admit(slot, n_map, n_total)
+                if pages is None:
+                    # refusal is exact: the worst case really didn't fit
+                    assert n_total > pre_avail
+                else:
+                    assert len(pages) == n_map
+                    assert len(set(pages)) == n_map
+                    assert TRASH_PAGE not in pages
+            elif kind == "grow" and slot in a.owned:
+                if a.reserved.get(slot, 0) > 0 or a.available_pages > 0:
+                    page = a.grow(slot)
+                    assert page != TRASH_PAGE
+                else:
+                    with pytest.raises(RuntimeError):
+                        a.grow(slot)
+            elif kind == "release":
+                a.release(slot)
+            # the partition invariant holds after EVERY op
+            assert a.audit() == []
+            assert a.used_pages + a.free_pages == num_pages
+            assert 0 <= a.available_pages <= a.free_pages
+        for slot in list(a.owned) + list(a.reserved):
+            a.release(slot)
+        assert a.free_pages == num_pages and a.reserved_pages == 0
+        assert sorted(a.free_list()) == sorted(a.all_pages())
+
+    @settings(deadline=None, max_examples=100, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(num_pages=st.integers(1, 10),
+           requests=st.lists(st.integers(1, 5), min_size=1, max_size=8))
+    def test_capacity_accounting_exact(num_pages, requests):
+        """Sequential admissions succeed exactly while the summed worst
+        cases fit the pool — no page stranded, none double-counted."""
+        a = PageAllocator(num_pages, BLOCK)
+        admitted = 0
+        for slot, n in enumerate(requests):
+            want = a.can_admit(n)
+            assert want == (n <= num_pages - a.used_pages
+                            - a.reserved_pages)
+            pages = a.admit(slot, n, n)
+            assert (pages is not None) == want
+            if pages is not None:
+                admitted += n
+        assert a.used_pages == admitted
+        assert a.audit() == []

@@ -15,6 +15,7 @@ from repro.core.radix import _Node
 from repro.core.router import KvRouterConfig
 from repro.serving.control_plane import ControlPlane
 from repro.serving.engine import Slot
+from repro.serving.paging import PageAllocator
 from repro.serving.simulator import ClusterConfig, SimRequest, Simulator
 from repro.serving.workload import WorkloadConfig
 
@@ -324,3 +325,87 @@ def test_clean_lifecycle_is_green(cluster):
     del cluster.running["a"]
     dec.release(0)
     cluster.step()
+
+
+# ------------------------------------------------------- paged KV pages -----
+
+
+class _FakePagedDecoder(_FakeDecoder):
+    """Adds a real :class:`PageAllocator` under the fake slot lifecycle,
+    so the P-invariants run against genuine pool accounting while the
+    seeded corruption stays surgical."""
+
+    def __init__(self, wid, num_slots=2, num_pages=8):
+        super().__init__(wid, num_slots)
+        self.paged = True
+        self.allocator = PageAllocator(num_pages, block=16)
+
+    def admit(self, slot, request_id, prefill_caches, first_token,
+              prompt_len, max_new, hashes=(), src_row=0):
+        self.allocator.admit(slot, self.allocator.pages_for(prompt_len + 1))
+        return super().admit(slot, request_id, prefill_caches, first_token,
+                             prompt_len, max_new, hashes, src_row)
+
+    def release(self, slot):
+        self.allocator.release(slot)
+        super().release(slot)
+
+
+@pytest.fixture()
+def paged_cluster():
+    cl = _FakeCluster()
+    cl.decoders = [_FakePagedDecoder(0), _FakePagedDecoder(1)]
+    attach_engine_sanitizer(cl)
+    return cl
+
+
+def _paged_admit(cl, dec, slot, rid, prompt_len=20):
+    dec.reserve(slot, rid)
+    dec.admit(slot, rid, None, 0, prompt_len, 4)
+    cl.running[rid] = (None, dec.worker_id, slot)
+
+
+def test_paged_clean_lifecycle_is_green(paged_cluster):
+    dec = paged_cluster.decoders[0]
+    _paged_admit(paged_cluster, dec, 0, "a")      # 20+1 tokens → 2 pages
+    _paged_admit(paged_cluster, dec, 1, "b", prompt_len=40)
+    paged_cluster.step()
+    del paged_cluster.running["a"]
+    dec.release(0)
+    paged_cluster.step()
+    del paged_cluster.running["b"]
+    dec.release(1)
+    paged_cluster.step()
+    assert dec.allocator.free_pages == dec.allocator.num_pages
+
+
+def test_leaked_page_fires_partition(paged_cluster):
+    """A page that falls out of both the free list and every live table
+    (a lost-update on the free list) breaks the pool partition."""
+    dec = paged_cluster.decoders[0]
+    _paged_admit(paged_cluster, dec, 0, "a")
+    dec.allocator._free.remove(dec.allocator._free[0])
+    with pytest.raises(SanitizeError, match="P1 page-pool partition"):
+        paged_cluster.step()
+
+
+def test_double_owned_page_fires(paged_cluster):
+    """The same physical page mapped into two live slots' tables — one
+    request would decode over another's KV."""
+    dec = paged_cluster.decoders[1]
+    _paged_admit(paged_cluster, dec, 0, "a")
+    _paged_admit(paged_cluster, dec, 1, "b")
+    dec.allocator.owned[1].append(dec.allocator.owned[0][0])
+    with pytest.raises(SanitizeError, match="P2 page double-own"):
+        paged_cluster.step()
+
+
+def test_released_slot_holding_pages_fires(paged_cluster):
+    """A slot torn down without returning its pages (release bypassed the
+    allocator) leaks pool capacity until restart."""
+    dec = paged_cluster.decoders[0]
+    _paged_admit(paged_cluster, dec, 0, "a")
+    del paged_cluster.running["a"]
+    dec.slots[0] = Slot()                    # bypasses release()
+    with pytest.raises(SanitizeError, match="P3 released-slot pages"):
+        paged_cluster.step()
