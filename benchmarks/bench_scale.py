@@ -5,13 +5,19 @@ Measures, at pool sizes 64/128/256:
 * **routing decisions/sec** on a steady-state router (claims + loads from
   a real scale-scenario run): the pre-PR hot path (per-worker radix walk,
   scalar cost loop, hashing inside the call) against the aggregated
-  single-walk + vectorized argmin + per-request hash memo;
+  single-walk + vectorized argmin + per-request hash memo, plus the
+  simhash-bucketed approximate scorer (``affinity="simhash"``) that
+  replaces the walk with a bucket lookup;
 * **request hot path**: the full per-request router/indexer sequence —
   pre-PR hashed the same prompt four times (route, memo, matched-blocks,
   insert), the memoized path hashes once;
 * **frozen-OPT window cost**: dense capacity-replicated Hungarian matrix
   vs. identical-column dedup;
-* **end-to-end wall time** of the ``scale-*`` scenarios.
+* **end-to-end wall time** of the ``scale-*`` scenarios;
+* **replica staleness sweep**: the ``scale-replica-*`` scenarios over
+  staleness × replica-count grids — PoA-hat, TTFT P99 and the
+  routing-agreement-vs-fresh probe quantify the price of routing on
+  bounded-staleness state views (the paper's decentralization axis).
 
 Output: CSV rows on stdout + ``reports/benchmarks/BENCH_scale.json``.
 ``--check BASELINE`` compares against a checked-in baseline and exits
@@ -32,18 +38,26 @@ import numpy as np
 from benchmarks.common import emit, save_json
 from repro.core.poa import CompletedRequest, PoATracker
 from repro.core.radix import block_hashes
+from repro.core.router import KvRouterConfig
 from repro.serving.scenarios import build_simulator, list_scenarios
 from repro.serving.workload import template_tokens
 
 SCALE_SCENARIOS = ("scale-64", "scale-128", "scale-256")
-assert set(SCALE_SCENARIOS) <= set(list_scenarios()), "registry out of sync"
+REPLICA_SCENARIOS = ("scale-replica-64", "scale-replica-128",
+                     "scale-replica-256")
+assert set(SCALE_SCENARIOS + REPLICA_SCENARIOS) <= set(list_scenarios()), \
+    "registry out of sync"
+
+# the replica sweep grid (full mode); smoke keeps the two corner points
+STALENESS_GRID = (0.0, 1.0, 4.0, 16.0)
+REPLICA_GRID = (1, 2, 4, 8)
 
 
-def _steady_state(name: str):
+def _steady_state(name: str, **overrides):
     """A router carrying the claims/loads of a real scenario run, plus a
     timestamp inside the run's freshness horizon (after the drain every
     claim is TTL-stale and both walks degenerate)."""
-    sim = build_simulator(name, seed=0, fast=True)
+    sim = build_simulator(name, seed=0, fast=True, **overrides)
     sim.run()
     now = max(r.decode_start for r in sim.completed)
     return sim, sim.router, now
@@ -118,9 +132,28 @@ def bench_routing(name: str, n: int = 2000) -> dict:
     res["decisions_per_s"] = 1e6 / res["decision_us_new"]
     res["decision_speedup"] = res["decision_us_legacy"] / res["decision_us_new"]
     res["request_speedup"] = res["request_us_legacy"] / res["request_us_new"]
+
+    # simhash-bucketed approximate scorer: same steady-state protocol, the
+    # radix walk replaced by a bucket lookup (exact-agreement on template
+    # workloads is pinned in tests/test_router.py; this row prices it)
+    sim, router, now = _steady_state(
+        name, router_config=KvRouterConfig(affinity="simhash"))
+    reqs = _request_stream(sim, n)
+    for toks, hs in reqs[:50]:
+        router.best_worker(toks, now=now, hashes=hs)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for toks, hs in reqs:
+            router.best_worker(toks, now=now, hashes=hs)
+        best = min(best, time.perf_counter() - t0)
+    res["decision_us_simhash"] = best / n * 1e6
+    res["decisions_per_s_simhash"] = 1e6 / res["decision_us_simhash"]
+
     emit(f"bench_scale_routing_{name}", res["decision_us_new"],
          f"workers={res['workers']};"
          f"decisions_per_s={res['decisions_per_s']:,.0f};"
+         f"decisions_per_s_simhash={res['decisions_per_s_simhash']:,.0f};"
          f"decision_speedup={res['decision_speedup']:.1f}x;"
          f"request_speedup={res['request_speedup']:.1f}x")
     return res
@@ -174,6 +207,47 @@ def bench_scenarios(smoke: bool) -> dict:
     return out
 
 
+def bench_replica(smoke: bool) -> dict:
+    """The staleness sweep: PoA-hat, TTFT P99, agreement-vs-fresh and
+    admission conflicts over the staleness × replica grid.  Only wall_s
+    is regression-gated; the game metrics are the measurement."""
+    if smoke:
+        grid = {"scale-replica-64": [(1, 0.0), (4, 4.0)]}
+        sizes = {"scale-replica-64": {}}
+    else:
+        full = [(r, s) for s in STALENESS_GRID for r in REPLICA_GRID]
+        grid = {"scale-replica-64": full,
+                "scale-replica-128": [(r, s) for s in (0.0, 4.0, 16.0)
+                                      for r in (1, 4)],
+                "scale-replica-256": [(r, s) for s in (0.0, 4.0, 16.0)
+                                      for r in (1, 4)]}
+        sizes = {"scale-replica-64": {"num_requests": 20_000},
+                 "scale-replica-128": {"num_requests": 10_000},
+                 "scale-replica-256": {"num_requests": 10_000}}
+    out: dict = {}
+    for name, points in grid.items():
+        for replicas, staleness in points:
+            t0 = time.perf_counter()
+            sim = build_simulator(name, seed=0, fast=smoke,
+                                  replicas=replicas, staleness=staleness,
+                                  **sizes[name])
+            res = sim.run()
+            wall = time.perf_counter() - t0
+            s = res.overall()
+            cp = sim.control
+            key = f"{name}.R{replicas}.S{staleness:g}"
+            out[key] = {"wall_s": wall, "completed": len(res.completed),
+                        "rps": s.rps, "ttft_p99": s.ttft_p99, "poa": s.poa,
+                        "agreement": cp.agreement_rate,
+                        "conflicts": cp.conflicts}
+            emit(f"bench_replica_{key}",
+                 wall / max(len(res.completed), 1) * 1e6,
+                 f"poa={s.poa:.3f};ttft_p99={s.ttft_p99:.3f}s;"
+                 f"agreement={cp.agreement_rate:.3f};"
+                 f"conflicts={cp.conflicts}")
+    return out
+
+
 def _flatten(payload: dict, prefix: str = "") -> dict:
     flat = {}
     for k, v in payload.items():
@@ -215,7 +289,8 @@ def run(smoke: bool = False) -> dict:
                "routing": {name: bench_routing(name)
                            for name in SCALE_SCENARIOS},
                "opt": bench_opt(),
-               "scenarios": bench_scenarios(smoke)}
+               "scenarios": bench_scenarios(smoke),
+               "replica": bench_replica(smoke)}
     save_json("BENCH_scale", payload)
     return payload
 

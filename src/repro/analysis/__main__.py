@@ -20,7 +20,7 @@ from repro.analysis.lint import RULES, lint_paths, rule_catalog
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="repo-specific AST lint pass (rules RA001-RA010)")
+        description="repo-specific AST lint pass (rules RA001-RA011)")
     ap.add_argument("paths", nargs="*", help="files or directories to lint")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalog and exit")

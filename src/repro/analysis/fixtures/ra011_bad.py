@@ -1,0 +1,26 @@
+"""RA011 bad: replica-side code reading authoritative control-plane
+state outside ``sync()`` — fresh reads smuggled into a supposedly
+bounded-staleness view."""
+
+
+class ReplicaLoadView:
+    def __init__(self, plane):
+        self._plane = plane
+        self.router = plane.router       # stashed live reference
+
+    def healthy_ids(self):
+        return self._plane.router.healthy_ids()   # fresh read, not snapshot
+
+    def load_of(self, wid):
+        return self.router.workers[wid].active_blocks
+
+
+class ReplicaRegimeView:
+    def __init__(self, plane):
+        self._plane = plane
+
+    def regime(self):
+        return self._plane.detector.regime        # live detector read
+
+    def overlap(self, plane, tokens, ids, now):
+        return plane.indexer.overlap_scores(tokens, ids, now)

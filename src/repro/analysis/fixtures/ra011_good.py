@@ -1,0 +1,33 @@
+"""RA011 good: a replica view that reads authoritative state only in
+``sync()`` and answers every query from its own frozen snapshot."""
+
+
+class ReplicaStateView:
+    def __init__(self, plane, index):
+        self._plane = plane              # held, never dereferenced off-sync
+        self.index = index
+        self._ids = []
+        self._loads = []
+        self._regime = None
+        self._claims = {}
+
+    def sync(self, now):
+        plane = self._plane              # the one sanctioned live read
+        self._ids = plane.router.healthy_ids()
+        self._loads = [plane.router.workers[w].active_blocks
+                       for w in self._ids]
+        self._regime = plane.detector.regime
+        self._claims = plane.router.indexer.snapshot_claims(now)
+        self.synced_at = now
+
+    def healthy_ids(self):
+        return list(self._ids)           # snapshot field only
+
+    @property
+    def regime(self):
+        return self._regime
+
+    def best_worker(self, overlaps):
+        costs = [1.0 - ov + ld for ov, ld in zip(overlaps, self._loads)]
+        j = min(range(len(self._ids)), key=lambda i: (costs[i], self._ids[i]))
+        return self._ids[j]

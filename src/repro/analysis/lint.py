@@ -1,4 +1,4 @@
-"""AST-based repo-specific lint rules (RA001-RA010).
+"""AST-based repo-specific lint rules (RA001-RA011).
 
 Generic linters cannot see this repo's contracts: that ``WorkerState``
 mutations must go through the cache-invalidating property setters, that a
@@ -561,6 +561,64 @@ def _check_ra010(m: Module) -> Iterable[Finding]:
                     f"the CPU-interpret guard cannot be skipped by default")
 
 
+# ------------------------------------------------------------------ RA011 ---
+
+# Authoritative control-plane state a replica-side view may only read at
+# sync time (ReplicaStateView.sync) — between syncs every read must come
+# from the view's own frozen snapshot fields.
+_AUTHORITATIVE_ATTRS = {"router", "indexer", "detector", "policy",
+                        "workers", "dual", "planner", "poa"}
+_RA011_CLASS_RE = None  # compiled lazily (re import kept local to the rule)
+
+
+def _replica_view_class(name: str) -> bool:
+    global _RA011_CLASS_RE
+    if _RA011_CLASS_RE is None:
+        import re
+        _RA011_CLASS_RE = re.compile(r"^Replica\w*View$")
+    return bool(_RA011_CLASS_RE.match(name))
+
+
+def _enclosing_method_name(m: Module, node: ast.AST,
+                           cls: ast.ClassDef) -> Optional[str]:
+    cur = m.parents.get(node)
+    name = None
+    while cur is not None and cur is not cls:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            name = cur.name
+        cur = m.parents.get(cur)
+    return name
+
+
+def _check_ra011(m: Module) -> Iterable[Finding]:
+    for cls in ast.walk(m.tree):
+        if not (isinstance(cls, ast.ClassDef)
+                and _replica_view_class(cls.name)):
+            continue
+        for node in ast.walk(cls):
+            if not isinstance(node, ast.Attribute):
+                continue
+            meth = _enclosing_method_name(m, node, cls)
+            if meth == "sync":
+                continue               # the one sanctioned authoritative read
+            if node.attr == "_plane" and meth not in (None, "__init__"):
+                yield m.finding(
+                    "RA011", node,
+                    f"replica view method `{meth}` reaches through "
+                    f"`_plane` to live control-plane state: between syncs "
+                    f"a replica may only read its own frozen snapshot "
+                    f"fields (move the read into `sync()`)")
+            elif node.attr in _AUTHORITATIVE_ATTRS \
+                    and not _is_self(node.value):
+                where = f"method `{meth}`" if meth else "class body"
+                yield m.finding(
+                    "RA011", node,
+                    f"replica view {where} reads authoritative "
+                    f"control-plane state `.{node.attr}` directly; "
+                    f"replica-side code must route reads through the "
+                    f"StateView snapshot (populate it in `sync()`)")
+
+
 # ----------------------------------------------------------------- catalog --
 
 RULES: List[Rule] = [
@@ -621,6 +679,14 @@ RULES: List[Rule] = [
          "missing flag either breaks CPU tests or silently runs "
          "interpret-mode on TPU.",
          _scope_all, _check_ra010),
+    Rule("RA011", "replica-side read of authoritative control-plane state",
+         "`Replica*View` classes are bounded-staleness snapshots: only "
+         "`sync()` may read the plane's live router/indexer/detector "
+         "state.  Any other method reaching through `_plane` (or stashing "
+         "a live `.router`/`.indexer`/... reference) silently reintroduces "
+         "fresh reads, and the measured staleness externality becomes a "
+         "lie.",
+         _scope_all, _check_ra011),
 ]
 
 _RULES_BY_CODE = {r.code: r for r in RULES}

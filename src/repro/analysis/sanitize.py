@@ -44,6 +44,16 @@ slot table ≡ the cluster's running/placed view at every tick boundary —
 and, for paged decoders, the page-pool invariants: free list ∪ live page
 tables exactly partitions the pool (P1), no page owned by two live slots
 (P2), released slots hold zero pages (P3).
+
+Replicated control plane (both backends, when ``replica_views`` exist):
+
+R1  bounded staleness: no replica view's age ever exceeds its configured
+    bound — event-clock seconds on the analytic backend, scheduler ticks
+    since the last ``sync_views`` on the engine backend;
+R2  snapshot integrity: each view's base snapshot (healthy set, load
+    vector, regime, hash claims) is identical to the frozen copy recorded
+    when ``sync_views`` ran — nothing but ``sync()`` may rewrite it (the
+    runtime complement of lint rule RA011).
 """
 from __future__ import annotations
 
@@ -91,6 +101,25 @@ class _Trace:
         raise SanitizeError(invariant, detail, self.events)
 
 
+def _check_frozen_views(control, frozen, trace: _Trace, where: str) -> None:
+    """R2: every replica view's base snapshot must equal the frozen copy
+    recorded at the last ``sync_views`` — a mismatch means replica-side
+    code rewrote snapshot state between syncs."""
+    views = getattr(control, "replica_views", ())
+    for v, want in zip(views, frozen):
+        got = v.frozen_state()
+        if got != want:
+            labels = ("synced_at", "healthy ids", "loads", "regime",
+                      "hash claims")
+            diffs = [labels[i] for i in range(len(labels))
+                     if got[i] != want[i]]
+            trace.fail(
+                "R2 replica snapshot integrity",
+                f"at {where}: replica {v.index} base snapshot diverged "
+                f"from its sync-time frozen copy in: {', '.join(diffs)} — "
+                f"only sync() may rewrite snapshot state")
+
+
 # -------------------------------------------------------------- analytic ----
 
 
@@ -113,7 +142,16 @@ class SimSanitizer:
         # rid -> (worker, hash chain): admitted, in-flight decodes — the
         # ground truth I2/I7 recompute from
         self.admitted: Dict[int, Tuple[int, Tuple[int, ...]]] = {}
+        # R2: frozen snapshot copies, recorded per sync_views (replicated
+        # control plane only; ReplicatedControlPlane syncs once during
+        # construction, before attachment, so seed the record here)
+        self.view_frozen: List[tuple] = []
         self._instrument()
+        if getattr(sim.control, "replica_views", None):
+            self._sync_views = sim.control.sync_views
+            sim.control.sync_views = self._wrap_sync_views
+            self.view_frozen = [v.frozen_state()
+                                for v in sim.control.replica_views]
 
     # ------------------------------------------------------------- wiring ---
 
@@ -221,6 +259,12 @@ class SimSanitizer:
         self.trace.add(f"t={self.sim.now:.4f} sync")
         self.check_all("sync")
 
+    def _wrap_sync_views(self, now):
+        self._sync_views(now)
+        self.trace.add(f"t={now:.4f} sync_views")
+        self.view_frozen = [v.frozen_state()
+                            for v in self.sim.control.replica_views]
+
     def _wrap_poll(self):
         self._poll()
         self.trace.add(f"t={self.sim.now:.4f} poll")
@@ -241,6 +285,20 @@ class SimSanitizer:
         # I4: radix tree structural audit (read-only walk)
         for problem in sim.router.indexer.audit():
             fail("I4 radix tree consistency", f"at {where}: {problem}")
+
+        # R1/R2: replicated control plane — view age within the staleness
+        # bound, base snapshots bit-identical to their sync-time copies
+        views = getattr(sim.control, "replica_views", ())
+        for v in views:
+            age = v.age(sim.now)
+            if age > v.bound + 1e-9:
+                fail("R1 replica staleness bound",
+                     f"at {where}: replica {v.index} view age {age:.6f}s "
+                     f"exceeds its configured bound {v.bound:.6f}s "
+                     f"(synced_at={v.synced_at})")
+        if views:
+            _check_frozen_views(sim.control, self.view_frozen, self.trace,
+                                where)
 
         # recompute the admitted view once: per-worker running counts and
         # per-(worker, hash) expected pin counts
@@ -343,6 +401,9 @@ class EngineSanitizer:
         self.trace = _Trace()
         # (worker, slot) -> request_id reserved but not yet admitted
         self.reserved: Dict[Tuple[int, int], str] = {}
+        # R1 (engine clock = scheduler ticks) / R2 state
+        self.view_frozen: List[tuple] = []
+        self.ticks_since_sync = 0
         self._instrument()
 
     def _instrument(self) -> None:
@@ -351,6 +412,18 @@ class EngineSanitizer:
             self._instrument_decoder(dec)
         self._step = cl.step
         cl.step = self._wrap_step
+        if getattr(cl.control, "replica_views", None):
+            self._sync_views = cl.control.sync_views
+            cl.control.sync_views = self._wrap_sync_views
+            self.view_frozen = [v.frozen_state()
+                                for v in cl.control.replica_views]
+
+    def _wrap_sync_views(self, now):
+        self._sync_views(now)
+        self.trace.add(f"t={now:.4f} sync_views")
+        self.ticks_since_sync = 0
+        self.view_frozen = [v.frozen_state()
+                            for v in self.cluster.control.replica_views]
 
     def _instrument_decoder(self, dec) -> None:
         wid = dec.worker_id
@@ -421,6 +494,20 @@ class EngineSanitizer:
             fail("I5 router load-cache coherence", f"at {where}: {divergence}")
         for problem in cl.control.router.indexer.audit():
             fail("I4 radix tree consistency", f"at {where}: {problem}")
+
+        # R1/R2: the engine's event clock is the scheduler tick — views
+        # must refresh within ``staleness_ticks`` ticks, and base
+        # snapshots must match their sync-time frozen copies
+        if getattr(cl.control, "replica_views", None):
+            self.ticks_since_sync += 1
+            bound = max(cl.staleness_ticks, 1)
+            if self.ticks_since_sync > bound:
+                fail("R1 replica staleness bound",
+                     f"at {where}: {self.ticks_since_sync} tick(s) since "
+                     f"the last sync_views exceeds the configured cadence "
+                     f"of {bound} tick(s)")
+            _check_frozen_views(cl.control, self.view_frozen, self.trace,
+                                where)
 
         # E2: slot table ≡ cluster running view.  Every running request
         # owns exactly its recorded slot; every active slot is owned by a

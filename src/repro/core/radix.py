@@ -29,7 +29,7 @@ router/indexer coherence bug this invariant fixes.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 BLOCK_SIZE = 16  # tokens per KV block (vLLM/Dynamo default granularity)
 
@@ -285,6 +285,28 @@ class KvIndexer:
 
     def num_blocks(self, worker: int) -> int:
         return self._worker_blocks.get(worker, 0)
+
+    def snapshot_claims(self, now: float = 0.0) -> Dict[int, Tuple[int, ...]]:
+        """Frozen view of every *fresh* claim: block hash → workers whose
+        claim on it is fresh at ``now``.  One read-only walk over the whole
+        tree (no TTL sweep, unlike ``overlap_depths``) — the bounded-
+        staleness replica views snapshot the indexer through this.
+
+        Freshness is prefix-monotone (``insert`` touches a whole
+        root-to-leaf path with one timestamp, so a parent is always at
+        least as fresh as any child), so the per-hash worker tuples are
+        prefix-closed exactly like live claims and a replica can replay
+        the ``overlap_depths`` walk against the dict alone."""
+        cutoff = self._cutoff(now)
+        out: Dict[int, Tuple[int, ...]] = {}
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            ws = tuple(w for w, t in n.workers.items() if t >= cutoff)
+            if ws:
+                out[n.key] = ws
+            stack.extend(n.children.values())
+        return out
 
     def claimed_hashes(self, worker: int) -> List[int]:
         """Audit hook: every block hash ``worker`` currently claims, from

@@ -37,6 +37,13 @@ from repro.core.radix import KvIndexer, block_hashes
 class KvRouterConfig:
     overlap_weight: float = 1.0        # ω (kv_overlap_score_weight)
     temperature: float = 0.0           # τ (router_temperature)
+    # Overlap scorer: "exact" walks the KvIndexer radix tree; "simhash"
+    # scores from the O(1) simhash-bucketed affinity index
+    # (repro.core.affinity) — approximate, production-stack style.  The
+    # choice is structural (made at router construction); per-request
+    # adaptive (τ, ω) overrides do not switch scorers mid-run.
+    affinity: str = "exact"            # exact | simhash
+    affinity_prefix_blocks: int = 4    # simhash feature window (blocks)
 
 
 class WorkerState:
@@ -110,6 +117,19 @@ class KvPushRouter:
         self.indexer = indexer or KvIndexer()
         self._rng = random.Random(seed)
         self.vectorized = True
+        # approximate overlap scorer (config.affinity="simhash"): replaces
+        # the radix walk with a bucket lookup on both scoring paths
+        self.affinity = None
+        if self.config.affinity == "simhash":
+            from repro.core.affinity import SimHashAffinity
+            self.affinity = SimHashAffinity(
+                block_size=self.indexer.block_size,
+                prefix_blocks=self.config.affinity_prefix_blocks,
+                ttl=self.indexer.ttl)
+        elif self.config.affinity != "exact":
+            raise ValueError(
+                f"unknown affinity {self.config.affinity!r}: "
+                f"expected 'exact' or 'simhash'")
         # cached dense routing state:
         # (healthy ids, id→position, loads array, ids ascending?)
         self._state_cache: Optional[
@@ -171,7 +191,8 @@ class KvPushRouter:
         """Returns (worker_ids, costs c_j, overlap fractions o_j)."""
         cfg = config or self.config
         ids = self.healthy_ids()
-        overlaps = self.indexer.overlap_scores(tokens, ids, now, hashes=hashes)
+        scorer = self.affinity if self.affinity is not None else self.indexer
+        overlaps = scorer.overlap_scores(tokens, ids, now, hashes=hashes)
         loads = self._normalized_load(ids)
         costs = []
         for ov, b_active in zip(overlaps, loads):
@@ -192,7 +213,8 @@ class KvPushRouter:
         normalized by their spread (Dynamo's τ∈[0,1] operates on normalized
         costs; raw block counts would make any τ≤1 effectively greedy)."""
         cfg = router_config_override or self.config
-        if (self.vectorized and self.indexer.aggregated
+        if (self.vectorized
+                and (self.affinity is not None or self.indexer.aggregated)
                 and cfg.temperature <= 0.0
                 and len(self.workers) >= self.VECTORIZE_MIN_WORKERS):
             return self._best_worker_vectorized(tokens, cfg, now, hashes)
@@ -233,7 +255,10 @@ class KvPushRouter:
             hashes = block_hashes(tokens, self.indexer.block_size)
         total = max(len(hashes), 1)
         ov = np.zeros(len(ids))
-        for w, d in self.indexer.overlap_depths(hashes, now).items():
+        depths = (self.affinity.overlap_depths(hashes, now)
+                  if self.affinity is not None
+                  else self.indexer.overlap_depths(hashes, now))
+        for w, d in depths.items():
             i = pos.get(w)
             if i is not None:
                 ov[i] = d / total
@@ -300,6 +325,10 @@ class KvPushRouter:
         st.healthy = True
         st.active_blocks = 0
         st.capacity = max(capacity, 1e-9)
+        if self.affinity is not None:
+            # a flipped-in worker is cache-cold; stale bucket credit from
+            # its previous decode stint must not survive the flip
+            self.affinity.clear_worker(worker_id)
         self._state_cache = None
         return st
 
@@ -309,7 +338,11 @@ class KvPushRouter:
         """Request placed: bump the load proxy and index its KV blocks."""
         st = self.workers[worker_id]
         st.active_blocks += decode_blocks
+        if hashes is None and self.affinity is not None:
+            hashes = block_hashes(tokens, self.indexer.block_size)
         self.indexer.insert(worker_id, tokens, now, hashes=hashes)
+        if self.affinity is not None:
+            self.affinity.insert(worker_id, hashes, now)
 
     def on_complete(self, worker_id: int, tokens: Sequence[int],
                     decode_blocks: float = 1.0):

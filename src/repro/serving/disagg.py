@@ -89,6 +89,8 @@ class DisaggregatedCluster:
                  max_prefill_batch: int = 8,
                  decode_impl: str = "pallas",
                  num_pages: Optional[int] = None,
+                 replicas: Optional[int] = None,
+                 staleness_ticks: int = 0,
                  control: Optional[ControlPlane] = None,
                  sanitize: Optional[bool] = None):
         self.model = model
@@ -104,18 +106,35 @@ class DisaggregatedCluster:
                                       decode_impl=decode_impl,
                                       num_pages=num_pages)
                          for i in range(num_decode)]
-        self.control = control or ControlPlane(
-            num_decode,
-            router_config=router_config,
-            routing_policy=routing_policy,
-            seed=seed,
-            adaptive=adaptive,
-            detector_config=(detector_config
-                             or DetectorConfig(theta1=0.5, theta2=5.0)),
-            cache_ttl=cache_ttl,
-            poa_window_s=60.0, poa_window_count=64,
-            log_decisions=True,
-            sanitize=False)   # the cluster attaches its own, richer one
+        # Replica-view sync cadence on the engine backend: the scheduler
+        # tick IS the event clock, so views refresh every
+        # ``staleness_ticks`` step() calls (0 = fresh pass-through views —
+        # bit-exact with the single-router plane for any replica count).
+        self.staleness_ticks = staleness_ticks if replicas is not None else 0
+        self._ticks = 0
+        if control is not None:
+            self.control = control
+        else:
+            plane_kw = dict(
+                router_config=router_config,
+                routing_policy=routing_policy,
+                seed=seed,
+                adaptive=adaptive,
+                detector_config=(detector_config
+                                 or DetectorConfig(theta1=0.5, theta2=5.0)),
+                cache_ttl=cache_ttl,
+                poa_window_s=60.0, poa_window_count=64,
+                log_decisions=True,
+                sanitize=False)   # the cluster attaches its own, richer one
+            if replicas is None:
+                self.control = ControlPlane(num_decode, **plane_kw)
+            else:
+                from repro.serving.control_plane import ReplicatedControlPlane
+                plane_kw["capacities"] = {
+                    i: float(slots_per_worker) for i in range(num_decode)}
+                self.control = ReplicatedControlPlane(
+                    num_decode, replicas=replicas,
+                    staleness_s=float(staleness_ticks), **plane_kw)
         self.router = self.control.router
         self.poa = self.control.poa
         self.metrics = self.control.metrics
@@ -218,6 +237,10 @@ class DisaggregatedCluster:
     def step(self) -> int:
         """One scheduler tick: admit pending, advance every decode engine.
         Returns number of completed requests this tick."""
+        if self.staleness_ticks > 0:
+            if self._ticks % self.staleness_ticks == 0:
+                self.control.sync_views(self._now())
+            self._ticks += 1
         self._try_schedule()
         self.occupancy.append(tuple(d.active_count for d in self.decoders))
         if any(d.paged for d in self.decoders):

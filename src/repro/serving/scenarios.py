@@ -128,7 +128,7 @@ def build_simulator(name: str, seed: int = 0, **overrides) -> Simulator:
     does not consume is forwarded to ``Scenario.build``."""
     sim_keys = {"router_config", "adaptive", "detector_config",
                 "routing_policy", "regime_params", "planner_config",
-                "lean_completed", "sanitize"}
+                "lean_completed", "sanitize", "replicas", "staleness"}
     sim_kw = {k: overrides.pop(k) for k in list(overrides)
               if k in sim_keys}
     return get_scenario(name, **overrides).build(seed=seed, **sim_kw)
@@ -142,7 +142,7 @@ _ENGINE_KEYS = {"model_name", "num_requests", "input_tokens",
                 "detector_config", "routing_policy", "cache_ttl",
                 "prefill_cache_entries", "kv_transfer_per_block",
                 "batch_prefill", "max_prefill_batch", "decode_impl",
-                "num_pages", "sanitize"}
+                "num_pages", "sanitize", "replicas", "staleness_ticks"}
 
 
 def build_backend(name: str, backend: str = "analytic", seed: int = 0,
@@ -547,6 +547,54 @@ def _scale_128(num_requests: int = 100_000, num_templates: int = 96,
 def _scale_256(num_requests: int = 100_000, num_templates: int = 128,
                fast: bool = False, **kw) -> Scenario:
     return _scale_scenario(256, False, num_requests, num_templates, fast, **kw)
+
+
+# Replicated control plane at scale ------------------------------------------
+#
+# The scale pools routed by R router replicas on bounded-staleness state
+# views (ReplicatedControlPlane): each replica refreshes its snapshot
+# every ``staleness`` metrics intervals and sees only its own placements
+# in between.  ``replicas``/``staleness`` are first-class knobs so the
+# staleness sweep in benchmarks/bench_scale.py (and the deterministic
+# replay tests) can parameterize the grid through the registry.
+
+def _scale_replica(num_decode: int, hetero: bool, num_requests: int,
+                   num_templates: int, fast: bool, replicas: int,
+                   staleness: float, **kw) -> Scenario:
+    kw["replicas"] = replicas
+    kw["staleness"] = staleness
+    return _scale_scenario(num_decode, hetero, num_requests, num_templates,
+                           fast, **kw)
+
+
+@_reg("scale-replica-64",
+      "scale-64 pool routed by R router replicas on bounded-staleness "
+      "views (default R=4, staleness=4 sync intervals)")
+def _scale_replica_64(num_requests: int = 100_000, num_templates: int = 64,
+                      fast: bool = False, replicas: int = 4,
+                      staleness: float = 4.0, **kw) -> Scenario:
+    return _scale_replica(64, False, num_requests, num_templates, fast,
+                          replicas, staleness, **kw)
+
+
+@_reg("scale-replica-128",
+      "scale-128 mixed-generation pool routed by R router replicas on "
+      "bounded-staleness views (default R=4, staleness=4 sync intervals)")
+def _scale_replica_128(num_requests: int = 100_000, num_templates: int = 96,
+                       fast: bool = False, replicas: int = 4,
+                       staleness: float = 4.0, **kw) -> Scenario:
+    return _scale_replica(128, True, num_requests, num_templates, fast,
+                          replicas, staleness, **kw)
+
+
+@_reg("scale-replica-256",
+      "scale-256 pool routed by R router replicas on bounded-staleness "
+      "views (default R=4, staleness=4 sync intervals)")
+def _scale_replica_256(num_requests: int = 100_000, num_templates: int = 128,
+                       fast: bool = False, replicas: int = 4,
+                       staleness: float = 4.0, **kw) -> Scenario:
+    return _scale_replica(256, False, num_requests, num_templates, fast,
+                          replicas, staleness, **kw)
 
 
 # Trace replay ---------------------------------------------------------------

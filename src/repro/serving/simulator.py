@@ -249,9 +249,22 @@ class Simulator:
                  regime_params: Optional[dict] = None,
                  planner_config: Optional[PlannerConfig] = None,
                  lean_completed: bool = False,
+                 replicas: Optional[int] = None,
+                 staleness: float = 0.0,
                  sanitize: Optional[bool] = None):
         self.cluster = cluster
         self.workload = workload
+        # Control-plane scale-out: ``replicas=None`` keeps the legacy
+        # single-router ControlPlane; an int builds a
+        # ReplicatedControlPlane whose replica views refresh every
+        # ``staleness`` sync events (staleness 0 = fresh views, pinned
+        # bit-exact with the single-router path for any replica count).
+        self.replicas = replicas
+        self.staleness = staleness
+        self._replica_sync_every = (max(int(round(staleness)), 1)
+                                    if replicas is not None and staleness > 0
+                                    else 0)
+        self._sync_i = 0
         # Large-pool scenarios keep 100k+ completed requests around; the
         # per-request O(workers) overlap/load vectors are only consumed by
         # the PoA tracker (which holds its own windowed reference), so lean
@@ -295,8 +308,7 @@ class Simulator:
             self._poa_universe = list(range(nd + npre))
         else:
             self._poa_universe = list(range(nd))
-        self.control = ControlPlane(
-            nd,
+        plane_kw = dict(
             router_config=router_config,
             routing_policy=routing_policy,
             seed=seed,
@@ -312,6 +324,14 @@ class Simulator:
             planner_config=planner_config,
             num_prefill=npre,
             sanitize=False)   # the simulator attaches its own, richer one
+        if replicas is None:
+            self.control = ControlPlane(nd, **plane_kw)
+        else:
+            from repro.serving.control_plane import ReplicatedControlPlane
+            self.control = ReplicatedControlPlane(
+                nd, replicas=replicas,
+                staleness_s=staleness * cluster.metrics_interval,
+                **plane_kw)
         cp = self.control
         self.router = cp.router
         self.policy = cp.policy
@@ -847,6 +867,14 @@ class Simulator:
             # invisible to the router (incomplete-information pathology).
             self.router.workers[wid].active_blocks = \
                 self.workers[wid].running
+        if self._replica_sync_every:
+            # replica views refresh every Nth sync event — the
+            # deterministic event-clock staleness cadence (N = ``staleness``
+            # sync intervals; the authoritative load copy above stays on
+            # every sync, exactly like the single-router path)
+            if self._sync_i % self._replica_sync_every == 0:
+                self.control.sync_views(self.now)
+            self._sync_i += 1
         nxt = self.now + self.cluster.metrics_interval
         if nxt <= self.workload.total_duration() + 30.0 or (
                 self.workload.mode != "closed" and self.in_flight > 0):

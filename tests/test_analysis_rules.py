@@ -17,7 +17,8 @@ _SPOOF_PATH = {"RA009": "src/repro/serving/simulator.py"}
 
 # minimum finding count the bad fixture must produce (distinct shapes)
 _MIN_BAD = {"RA001": 4, "RA002": 3, "RA003": 4, "RA004": 1, "RA005": 4,
-            "RA006": 3, "RA007": 3, "RA008": 1, "RA009": 3, "RA010": 3}
+            "RA006": 3, "RA007": 3, "RA008": 1, "RA009": 3, "RA010": 3,
+            "RA011": 5}
 
 ALL_CODES = sorted(r.code for r in RULES)
 

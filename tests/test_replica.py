@@ -1,0 +1,289 @@
+"""Replicated control plane: R router replicas on bounded-staleness views.
+
+The refactor contract (the pin the rest of the suite trusts): with R=1
+and staleness=0 the replicated plane IS the single-router plane —
+request-level and poll-log bit-exact across the whole scenario registry,
+on both backends.  With staleness > 0 the runs stay deterministic (same
+seed → identical per-replica decision logs), the write path reconciles
+replica conflicts at admission, and the agreement-vs-fresh probe
+quantifies how often a stale view disagrees with fresh state.
+"""
+import json
+
+import pytest
+
+from repro.serving.control_plane import (ControlPlane,
+                                         ReplicatedControlPlane,
+                                         StateView)
+from repro.serving.scenarios import build_simulator, list_scenarios
+from repro.serving.simulator import ClusterConfig, Simulator
+from repro.serving.workload import WorkloadConfig
+
+ALL_SCENARIOS = list_scenarios()
+
+TOKENS = list(range(64))
+
+
+def _request_view(res):
+    return [(r.rid, r.decode_worker, r.submit_t, r.prefill_end, r.finish_t,
+             r.overlap, r.overlaps_all, r.onboard_frac, r.onboard_latency)
+            for r in res.completed]
+
+
+def _poll_view(res):
+    # json round-trip: NaN PoA values compare equal as the literal "NaN"
+    return json.dumps(res.poll_log)
+
+
+# ------------------------------------------- R=1 / staleness=0 pin ----------
+
+
+@pytest.mark.parametrize("name", ALL_SCENARIOS)
+def test_identity_replica_bit_exact_full_registry(name):
+    """R=1/staleness=0 replicated plane vs the single-router plane, over
+    EVERY registered scenario (replicas=None forces the plain plane even
+    on the scale-replica-* entries, whose factory defaults are stale)."""
+    base = build_simulator(name, seed=0, fast=True,
+                           replicas=None, staleness=0.0)
+    repl = build_simulator(name, seed=0, fast=True,
+                           replicas=1, staleness=0.0)
+    assert not isinstance(base.control, ReplicatedControlPlane)
+    assert isinstance(repl.control, ReplicatedControlPlane)
+    rb, rr = base.run(), repl.run()
+    assert _request_view(rb) == _request_view(rr)
+    assert _poll_view(rb) == _poll_view(rr)
+    # identity path: no snapshots exist and every decision "agrees"
+    assert repl.control.replica_views == []
+    assert repl.control.agreement_rate == 1.0
+    assert repl.control.conflicts == 0
+
+
+@pytest.mark.parametrize("name", ["scale-64", "70b-1p2d-ramp"])
+def test_staleness_zero_bit_exact_for_any_replica_count(name):
+    """Fresh pass-through views make R itself invisible: R=4 at
+    staleness=0 still reproduces the single-router run bit-exactly."""
+    base = build_simulator(name, seed=0, fast=True)
+    repl = build_simulator(name, seed=0, fast=True,
+                           replicas=4, staleness=0.0)
+    rb, rr = base.run(), repl.run()
+    assert _request_view(rb) == _request_view(rr)
+    assert _poll_view(rb) == _poll_view(rr)
+    # decisions still round-robin across the R logs
+    logs = repl.control.replica_logs
+    assert len(logs) == 4
+    assert sum(len(l) for l in logs) == repl.control.decisions_total
+    assert max(len(l) for l in logs) - min(len(l) for l in logs) <= 1
+
+
+# ------------------------------------------------ stale determinism ---------
+
+
+def _replica_log_view(sim):
+    return [[(d.rid, d.worker, d.overlap, d.now) for d in log]
+            for log in sim.control.replica_logs]
+
+
+def test_stale_replay_same_seed_identical_logs():
+    """staleness > 0 runs are deterministic: the same seed reproduces the
+    per-replica decision logs (and the run itself) exactly."""
+    a = build_simulator("scale-replica-64", seed=3, fast=True)
+    b = build_simulator("scale-replica-64", seed=3, fast=True)
+    ra, rb = a.run(), b.run()
+    assert _replica_log_view(a) == _replica_log_view(b)
+    assert _request_view(ra) == _request_view(rb)
+    assert _poll_view(ra) == _poll_view(rb)
+    assert a.control.agreement_rate == b.control.agreement_rate
+    assert a.control.conflicts == b.control.conflicts
+    c = build_simulator("scale-replica-64", seed=4, fast=True)
+    c.run()
+    assert _replica_log_view(a) != _replica_log_view(c)
+
+
+def test_stale_run_disagrees_and_reconciles():
+    """At the default grid point (R=4, staleness=4) stale views must
+    actually disagree with fresh state sometimes — otherwise the sweep
+    measures nothing — and every conflict resolves at admission."""
+    sim = build_simulator("scale-replica-64", seed=0, fast=True)
+    res = sim.run()
+    cp = sim.control
+    assert 0.0 < cp.agreement_rate < 1.0
+    assert cp.conflicts > 0
+    assert sim.in_flight == 0 and len(res.completed) > 1000
+    # round-robin assignment keeps the replica logs balanced
+    logs = cp.replica_logs
+    assert max(len(l) for l in logs) - min(len(l) for l in logs) <= 1
+    assert sum(len(l) for l in logs) == cp.decisions_total
+    # every view's age respects its staleness bound at run end
+    for v in cp.replica_views:
+        assert v.age(sim.now) <= v.bound + 1e-9
+
+
+def test_view_snapshot_is_isolated_from_live_state():
+    """Between syncs a replica's snapshot must not move when the
+    authoritative store does — that isolation IS the staleness model."""
+    cp = ReplicatedControlPlane(4, replicas=2, staleness_s=5.0,
+                                capacities={i: 8.0 for i in range(4)})
+    v = cp.replica_views[0]
+    frozen = v.frozen_state()
+    # authoritative writes: load bump, claim insert, health flip
+    cp.router.on_schedule(2, TOKENS, decode_blocks=3.0, now=1.0)
+    cp.router.set_health(3, False)
+    assert v.frozen_state() == frozen
+    assert 3 in v.healthy_ids()              # stale view still trusts w3
+    cp.sync_views(2.0)
+    assert v.frozen_state() != frozen
+    assert 3 not in v.healthy_ids()
+
+
+def test_conflict_unhealthy_worker_redirects_at_admission():
+    """A stale view routing onto a worker that left the pool after the
+    last sync: the serialized write takes the fresh choice instead."""
+    cp = ReplicatedControlPlane(2, replicas=1, staleness_s=10.0,
+                                capacities={0: 8.0, 1: 8.0})
+    cp.sync_views(0.0)
+    # make worker 0 the stale view's favorite, then kill it
+    cp.router.on_schedule(0, TOKENS, now=0.0)
+    cp.sync_views(0.5)
+    cp.router.set_health(0, False)
+    w, _, _, ids = cp.select_worker(TOKENS, now=1.0, rid=0)
+    assert w == 1 and 0 not in ids
+    assert cp.conflicts == 1
+    # the replica log still records what the replica *decided* (worker 0)
+    assert cp.replica_logs[0][-1].worker == 0
+
+
+def test_admission_ledger_bounds_contested_pileup():
+    """Contested placements (stale view and fresh state disagree) land —
+    and queue — until occupancy plus in-window contested writes exhaust
+    the bounded admission queue (ADMIT_QUEUE_FACTOR × capacity); only the
+    overflow reconciles to the fresh choice."""
+    cp = ReplicatedControlPlane(2, replicas=1, staleness_s=100.0,
+                                capacities={0: 4.0, 1: 4.0})
+    cp.sync_views(0.0)                       # view snapshots loads (0, 0)
+    cp.router.workers[0].active_blocks = 7   # authoritative: w0 near-full
+    # stale tie-break herds onto w0; fresh prefers the idle w1
+    first, _, _, _ = cp.select_worker(TOKENS, now=1.0, rid=0)
+    assert first == 0 and cp.conflicts == 0  # lands: 7 + 0 < 2 x 4
+    assert cp._window_writes == {0: 1}
+    second, _, _, _ = cp.select_worker(TOKENS, now=1.1, rid=1)
+    assert second == 1 and cp.conflicts == 1  # overflow: 7 + 1 >= 8
+    cp.sync_views(2.0)                       # sync opens a new window
+    assert cp._window_writes == {}
+
+
+def test_stale_views_require_kv_policy():
+    with pytest.raises(ValueError, match="routing_policy='kv'"):
+        ReplicatedControlPlane(2, replicas=2, staleness_s=1.0,
+                               routing_policy="round-robin")
+    with pytest.raises(ValueError, match="replicas"):
+        ReplicatedControlPlane(2, replicas=0)
+    # staleness 0 works with any policy (identity path)
+    cp = ReplicatedControlPlane(2, replicas=2, staleness_s=0.0,
+                                routing_policy="round-robin")
+    assert cp.replica_views == []
+
+
+def test_fresh_view_is_default_read_path():
+    """The single-router plane reads through a StateView too — the
+    snapshot layer is the ONLY read path, not a replicated-only bolt-on."""
+    cp = ControlPlane(3)
+    assert isinstance(cp.view, StateView)
+    assert cp.view.age(123.4) == 0.0
+    assert cp.view.healthy_ids() == [0, 1, 2]
+    w, ov, overlaps, ids = cp.select_worker(TOKENS, now=0.0, rid=0)
+    assert w in ids and len(overlaps) == len(ids)
+
+
+# ------------------------------------------------- bounded decision log -----
+
+
+def test_decision_log_bounded_deque():
+    cp = ControlPlane(2, log_decisions=True, decision_log_maxlen=8)
+    for i in range(20):
+        cp.select_worker(TOKENS, now=float(i), rid=i)
+    assert cp.decision_log.maxlen == 8
+    assert len(cp.decision_log) == 8
+    assert [d.rid for d in cp.decision_log] == list(range(12, 20))
+
+
+def test_decision_log_unbounded_by_default():
+    """Parity scenarios rely on the default: the harness replays EVERY
+    placement, so nothing may fall off the front."""
+    cp = ControlPlane(2, log_decisions=True)
+    for i in range(20):
+        cp.select_worker(TOKENS, now=float(i), rid=i)
+    assert cp.decision_log.maxlen is None
+    assert [d.rid for d in cp.decision_log] == list(range(20))
+
+
+def test_bounded_log_does_not_change_routing():
+    """The cap is pure memory bounding: decisions are identical with and
+    without it."""
+    a = ControlPlane(4, log_decisions=True, seed=1)
+    b = ControlPlane(4, log_decisions=True, decision_log_maxlen=4, seed=1)
+    picks_a, picks_b = [], []
+    for i in range(32):
+        picks_a.append(a.select_worker(TOKENS, now=float(i), rid=i)[0])
+        picks_b.append(b.select_worker(TOKENS, now=float(i), rid=i)[0])
+    assert picks_a == picks_b
+    assert len(b.decision_log) == 4
+
+
+# ------------------------------------------------------------- engine -------
+
+
+def test_engine_cluster_syncs_on_tick_cadence():
+    """Engine backend: views refresh every ``staleness_ticks`` step()
+    calls — checked by counting actual sync timestamps."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.serving.disagg import DisaggregatedCluster
+
+    cfg = get_reduced("phi4-mini-3.8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), jnp.bfloat16)
+    cl = DisaggregatedCluster(model, params, num_decode=2,
+                              slots_per_worker=2, replicas=2,
+                              staleness_ticks=3)
+    assert isinstance(cl.control, ReplicatedControlPlane)
+    synced = []
+    orig = cl.control.sync_views
+    cl.control.sync_views = lambda now: (synced.append(now), orig(now))[1]
+    for _ in range(9):
+        cl.step()
+    assert len(synced) == 3                  # ticks 0, 3, 6
+
+
+@pytest.mark.slow
+def test_engine_identity_replica_bit_exact():
+    """R=1/staleness_ticks=0 on the real-JAX engine backend reproduces
+    the single-router run: identical decisions, tokens and regime
+    transitions on a parity scenario."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.models import build_model
+    from repro.serving.scenarios import build_backend, parity_scenarios
+
+    cfg = get_reduced("phi4-mini-3.8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), jnp.bfloat16)
+    name = parity_scenarios()[0]
+
+    runs = {}
+    for replicas in (None, 1):
+        eng = build_backend(name, backend="engine", seed=0,
+                            model=model, params=params,
+                            replicas=replicas, staleness_ticks=0)
+        res = eng.run()
+        runs[replicas] = (
+            [(i, w, round(ov, 12)) for i, w, ov in res.decisions],
+            [(r.request_id, tuple(r.output)) for r in
+             sorted(res.requests, key=lambda r: r.request_id)],
+            [(a, b) for _, a, b in res.regime_transitions],
+        )
+    assert runs[None] == runs[1]

@@ -1,7 +1,10 @@
-"""Smart Router semantics (Eq. 1/2) + static baselines."""
+"""Smart Router semantics (Eq. 1/2) + static baselines + simhash affinity."""
 import collections
 
+import pytest
 
+from repro.core.affinity import SimHashAffinity, simhash64
+from repro.core.radix import block_hashes
 from repro.core.router import (KvPushRouter, KvRouterConfig, PowerOfTwoRouter,
                                RandomRouter, RoundRobinRouter)
 
@@ -121,3 +124,105 @@ def test_on_complete_never_negative():
     r = KvPushRouter(1)
     r.on_complete(0, TOKENS_A)
     assert r.workers[0].active_blocks == 0.0
+
+
+# ------------------------------------------------- simhash affinity ---------
+
+
+def _templates(n, blocks=6, block=16):
+    """n disjoint template prompts, ``blocks`` KV blocks each."""
+    return [list(range(t * 10_000, t * 10_000 + blocks * block))
+            for t in range(n)]
+
+
+def test_simhash_exact_agreement_on_template_pool():
+    """The acceptance pin for the approximate scorer: on a small pool
+    driven by a template workload (every request of a template repeats
+    the same prompt) the simhash-bucketed router must make the SAME
+    decision with the SAME overlap as the exact radix walk, every time."""
+    import random
+    exact = KvPushRouter(4, KvRouterConfig(temperature=0.0,
+                                           affinity="exact"))
+    approx = KvPushRouter(4, KvRouterConfig(temperature=0.0,
+                                            affinity="simhash"))
+    assert approx.affinity is not None and exact.affinity is None
+    temps = _templates(8)
+    rng = random.Random(42)
+    placed = []
+    for i in range(200):
+        toks = temps[rng.randrange(len(temps))]
+        we, ove, ovse = exact.best_worker(toks, now=float(i))
+        wa, ova, ovsa = approx.best_worker(toks, now=float(i))
+        assert (we, ove, ovse) == (wa, ova, ovsa), f"diverged at step {i}"
+        exact.on_schedule(we, toks, now=float(i))
+        approx.on_schedule(wa, toks, now=float(i))
+        placed.append((we, toks))
+        if len(placed) > 24:               # churn load like completions do
+            wd, td = placed.pop(0)
+            exact.on_complete(wd, td)
+            approx.on_complete(wd, td)
+    assert len({w for w, _ in placed}) == 4  # all workers participated
+
+
+def test_simhash_signature_commits_to_whole_prefix():
+    """Chained block hashes: divergence in block 0 flips every later
+    feature, so prefixes differing anywhere get different buckets."""
+    a = block_hashes(list(range(64)), 16)
+    b = block_hashes([1] + list(range(1, 64)), 16)   # first token differs
+    aff = SimHashAffinity(block_size=16, prefix_blocks=4)
+    assert aff.signature(a) != aff.signature(b)
+    assert aff.signature(a) == aff.signature(list(a))    # memo-stable
+    assert simhash64([]) == 0
+
+
+def test_simhash_depth_capped_by_request_length():
+    """A worker that cached a LONG prompt over-credits a short same-bucket
+    request at most up to the request's own length (documented bias)."""
+    aff = SimHashAffinity(block_size=16, prefix_blocks=2)
+    long_hs = list(range(100, 108))        # 8 blocks cached
+    short_hs = long_hs[:4]                 # same leading 2 blocks → bucket
+    aff.insert(0, long_hs, now=0.0)
+    assert aff.overlap_depths(short_hs, now=0.0) == {0: 4}
+    assert aff.overlap_scores([], [0, 1], hashes=short_hs) == [1.0, 0.0]
+
+
+def test_simhash_ttl_expires_and_self_cleans():
+    aff = SimHashAffinity(block_size=16, prefix_blocks=4, ttl=2.0)
+    hs = list(range(8))
+    aff.insert(0, hs, now=0.0)
+    assert aff.overlap_depths(hs, now=1.0) == {0: 8}
+    assert aff.overlap_depths(hs, now=5.0) == {}     # expired
+    assert aff._buckets[aff.signature(hs)] == {}     # dropped on read
+
+
+def test_simhash_deepest_fresh_insert_wins():
+    aff = SimHashAffinity(block_size=16, prefix_blocks=4, ttl=10.0)
+    hs = list(range(8))
+    aff.insert(0, hs, now=0.0)
+    aff.insert(0, hs[:5], now=1.0)         # shallower re-insert, still fresh
+    assert aff.overlap_depths(hs, now=1.0) == {0: 8}
+    aff.insert(0, hs[:5], now=20.0)        # deep entry stale by now: 5 wins
+    assert aff.overlap_depths(hs, now=20.0) == {0: 5}
+
+
+def test_simhash_worker_flip_clears_affinity():
+    """Game 1 repartitioning: a worker flipping back into the decode pool
+    is cache-cold — add_worker must drop its bucket credit."""
+    r = KvPushRouter(2, KvRouterConfig(temperature=0.0, affinity="simhash"))
+    r.on_schedule(0, TOKENS_A)
+    assert r.best_worker(TOKENS_A)[1] == 1.0
+    r.add_worker(0)
+    w, ov, _ = r.best_worker(TOKENS_A)
+    assert ov == 0.0
+
+
+def test_unknown_affinity_rejected():
+    with pytest.raises(ValueError, match="affinity"):
+        KvPushRouter(2, KvRouterConfig(affinity="minhash"))
+
+
+def test_control_plane_propagates_ttl_to_affinity():
+    from repro.serving.control_plane import ControlPlane
+    cp = ControlPlane(2, router_config=KvRouterConfig(affinity="simhash"),
+                      cache_ttl=7.5)
+    assert cp.router.affinity.ttl == 7.5

@@ -13,7 +13,7 @@ import pytest
 from repro.analysis.sanitize import SanitizeError, attach_engine_sanitizer
 from repro.core.radix import _Node
 from repro.core.router import KvRouterConfig
-from repro.serving.control_plane import ControlPlane
+from repro.serving.control_plane import ControlPlane, ReplicatedControlPlane
 from repro.serving.engine import Slot
 from repro.serving.paging import PageAllocator
 from repro.serving.simulator import ClusterConfig, SimRequest, Simulator
@@ -225,6 +225,55 @@ def test_setter_write_keeps_cache_coherent():
     cp.select_worker(tokens, now=0.0, rid=1)          # no error
 
 
+# ------------------------------------------------- R1/R2 replica views ------
+
+
+@pytest.fixture()
+def rsim():
+    """A small completed *replicated* run (R=2, staleness=2 intervals)."""
+    s = Simulator(ClusterConfig.for_model("llama-3.1-70b", "1P/2D"),
+                  WorkloadConfig.single_level(16, hold_s=4.0),
+                  seed=0, sanitize=True, replicas=2, staleness=2.0)
+    s.run()
+    s.sanitizer.check_all("post-run")        # baseline must be green
+    assert len(s.control.replica_views) == 2
+    return s
+
+
+def test_replica_view_age_past_bound_fires(rsim):
+    """A view whose refresh was silently skipped (sync scheduling bug)
+    ages past its staleness bound."""
+    rsim.control.replica_views[0].synced_at -= 100.0
+    with pytest.raises(SanitizeError, match="R1 replica staleness bound"):
+        rsim.sanitizer.check_all()
+
+
+def test_replica_snapshot_load_mutation_fires(rsim):
+    """Base-snapshot loads drifting between syncs means a replica saw a
+    fresh (authoritative) write — exactly what RA011 forbids statically."""
+    v = rsim.control.replica_views[0]
+    v._loads = tuple(l + 1.0 for l in v._loads)
+    with pytest.raises(SanitizeError,
+                       match="R2 replica snapshot integrity.*loads"):
+        rsim.sanitizer.check_all()
+
+
+def test_replica_snapshot_claim_mutation_fires(rsim):
+    v = rsim.control.replica_views[1]
+    v._hash_claims[BOGUS_HASH] = (0,)
+    with pytest.raises(SanitizeError,
+                       match="R2 replica snapshot integrity.*hash claims"):
+        rsim.sanitizer.check_all()
+
+
+def test_local_delta_does_not_trip_snapshot_check(rsim):
+    """A replica noting its *own* placements between syncs is the designed
+    optimistic delta, not a snapshot violation."""
+    v = rsim.control.replica_views[0]
+    v.note_placement(0, [BOGUS_HASH, BOGUS_HASH + 1])
+    rsim.sanitizer.check_all()               # still green
+
+
 # --------------------------------------------------------- error quality ----
 
 
@@ -409,3 +458,43 @@ def test_released_slot_holding_pages_fires(paged_cluster):
     dec.slots[0] = Slot()                    # bypasses release()
     with pytest.raises(SanitizeError, match="P3 released-slot pages"):
         paged_cluster.step()
+
+
+# ----------------------------------------------- engine replica views -------
+
+
+@pytest.fixture()
+def replica_cluster():
+    """Fake cluster fronted by a real ReplicatedControlPlane (R=2,
+    staleness=2 scheduler ticks)."""
+    cl = _FakeCluster()
+    cl.control = ReplicatedControlPlane(
+        2, replicas=2, staleness_s=2.0, capacities={0: 8.0, 1: 8.0})
+    cl.staleness_ticks = 2
+    attach_engine_sanitizer(cl)
+    return cl
+
+
+def test_engine_missed_sync_cadence_fires(replica_cluster):
+    """The scheduler loop forgetting to call sync_views on its tick
+    cadence is the engine-clock form of an R1 violation."""
+    replica_cluster.step()
+    replica_cluster.step()                   # at the bound: still green
+    with pytest.raises(SanitizeError, match="R1 replica staleness bound"):
+        replica_cluster.step()
+
+
+def test_engine_resync_resets_cadence(replica_cluster):
+    replica_cluster.step()
+    replica_cluster.control.sync_views(1.0)  # resets the tick counter
+    replica_cluster.step()
+    replica_cluster.step()                   # green again
+
+
+def test_engine_snapshot_mutation_fires(replica_cluster):
+    replica_cluster.control.sync_views(0.5)  # fresh frozen copy, ticks=0
+    v = replica_cluster.control.replica_views[1]
+    v._hash_claims[BOGUS_HASH] = (0,)
+    with pytest.raises(SanitizeError,
+                       match="R2 replica snapshot integrity"):
+        replica_cluster.step()
