@@ -1,0 +1,188 @@
+"""Fabric sweep (fourth game) — congestion win + overhead + link usage.
+
+Three sections:
+
+* **congestion**: the congested ``fabric-scale-64`` scenario with and
+  without network-aware decode selection.  Cache-affinity-only routing
+  herds cold transfers onto one decode NIC per sync window; the
+  network-aware router quotes each candidate's effective transfer time
+  from live link queues and spreads them.  The win gate — network-aware
+  must improve TTFT P99 **and** the network PoA-hat — is the PR's
+  acceptance observable and fails the run under ``--check``.
+* **overhead**: wall time of the congested scenario against the same
+  pool with no fabric attached (``scale-64``) — the event-model cost of
+  pricing the network at all.
+* **links**: per-class link utilization histogram (decode NICs, prefill
+  NICs, rack switches, spine) under both routing modes — where the bytes
+  actually flowed.
+
+Output: CSV rows on stdout + ``reports/benchmarks/BENCH_fabric.json``.
+``--check BASELINE`` applies bench_scale's >2x wall-time regression rule
+AND the congestion win gate, exiting non-zero on either.
+
+    PYTHONPATH=src python -m benchmarks.bench_fabric [--smoke] [--check FILE]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import emit, save_json
+from benchmarks.bench_scale import check_regression
+from repro.serving.scenarios import build_simulator, list_scenarios
+
+CONGESTED = "fabric-scale-64"
+UNFABRIC = "scale-64"
+assert {CONGESTED, UNFABRIC, "fabric-ramp", "fabric-drain"} <= \
+    set(list_scenarios()), "registry out of sync"
+
+
+def _run(name: str, smoke: bool, **overrides):
+    t0 = time.perf_counter()
+    sim = build_simulator(name, seed=0, fast=smoke, **overrides)
+    res = sim.run()
+    return sim, res, time.perf_counter() - t0
+
+
+def _mode_stats(sim, res, wall: float) -> dict:
+    s = res.overall()
+    ng = res.poll_log[-1]["network_game"]
+    waits = [r.transfer_wait for r in res.completed]
+    return {"wall_s": wall, "completed": len(res.completed),
+            "rps": s.rps, "ttft_p99": s.ttft_p99,
+            "poa_latency_index": s.poa,
+            "poa_network": ng["poa_network"],
+            "transfer_wait_s": sum(waits),
+            "transfer_wait_max": max(waits, default=0.0),
+            "transfers": sim.fabric.enqueued,
+            "cancelled": sim.fabric.cancelled}
+
+
+def bench_congestion(smoke: bool) -> dict:
+    out: dict = {}
+    for mode, aware in (("flat", False), ("aware", True)):
+        sim, res, wall = _run(CONGESTED, smoke, network_aware=aware)
+        out[mode] = _mode_stats(sim, res, wall)
+        m = out[mode]
+        emit(f"bench_fabric_{mode}",
+             wall / max(m["completed"], 1) * 1e6,
+             f"ttft_p99={m['ttft_p99']:.4f}s;"
+             f"poa_network={m['poa_network']:.4f};"
+             f"transfer_wait_s={m['transfer_wait_s']:.2f};"
+             f"transfers={m['transfers']}")
+    # the acceptance observable (ratios > 1 mean network-aware wins)
+    out["ttft_p99_gain"] = out["flat"]["ttft_p99"] / max(
+        out["aware"]["ttft_p99"], 1e-12)
+    out["poa_network_gain"] = out["flat"]["poa_network"] / max(
+        out["aware"]["poa_network"], 1e-12)
+    emit("bench_fabric_win", 0.0,
+         f"ttft_p99_gain={out['ttft_p99_gain']:.2f}x;"
+         f"poa_network_gain={out['poa_network_gain']:.4f}x")
+    return out
+
+
+def bench_overhead(smoke: bool) -> dict:
+    """Event-model cost of the fabric itself: same pool and workload,
+    with and without link accounting (routing decisions identical)."""
+    _, res0, wall0 = _run(UNFABRIC, smoke)
+    _, res1, wall1 = _run(CONGESTED, smoke)
+    out = {"wall_s_flat_charge": wall0, "wall_s_fabric": wall1,
+           "overhead_x": wall1 / max(wall0, 1e-9),
+           "completed": len(res1.completed)}
+    emit("bench_fabric_overhead", wall1 / max(len(res1.completed), 1) * 1e6,
+         f"fabric_s={wall1:.2f};flat_s={wall0:.2f};"
+         f"overhead={out['overhead_x']:.2f}x")
+    return out
+
+
+def bench_links(smoke: bool) -> dict:
+    """Per-class utilization: where cumulative transmit seconds landed
+    under each routing mode.  Herding shows up as decode-NIC seconds
+    concentrated on few links; spreading flattens the histogram."""
+    out: dict = {}
+    for mode, aware in (("flat", False), ("aware", True)):
+        sim, res, _ = _run(CONGESTED, smoke, network_aware=aware)
+        links = res.poll_log[-1]["links"]
+        decode = set(sim.fabric.decode_ids)
+        cls: dict = {}
+        peak = 0.0
+        for name, st in links.items():
+            if name.startswith("nic:"):
+                wid = int(name.split(":")[1])
+                key = "nic_decode" if wid in decode else "nic_prefill"
+                if wid in decode:
+                    peak = max(peak, st["busy_s"])
+            else:
+                key = "rack" if name.startswith("rack:") else "spine"
+            c = cls.setdefault(key, {"busy_s": 0.0, "bytes": 0, "links": 0})
+            c["busy_s"] += st["busy_s"]
+            c["bytes"] += st["bytes"]
+            c["links"] += 1
+        nd = cls.get("nic_decode", {"busy_s": 0.0, "links": 1})
+        mean = nd["busy_s"] / max(nd["links"], 1)
+        out[mode] = {"classes": cls,
+                     "decode_nic_peak_busy_s": peak,
+                     "decode_nic_mean_busy_s": mean,
+                     "decode_nic_peak_to_mean": peak / max(mean, 1e-12)}
+        emit(f"bench_fabric_links_{mode}", 0.0,
+             f"decode_nic_peak_s={peak:.2f};mean_s={mean:.2f};"
+             f"peak_to_mean={out[mode]['decode_nic_peak_to_mean']:.1f}x")
+    return out
+
+
+def check_win(payload: dict) -> list:
+    """The acceptance gate: on the congested scenario, network-aware
+    selection must strictly improve TTFT P99 and the network PoA-hat
+    over cache-affinity-only routing."""
+    c = payload["congestion"]
+    failures = []
+    if c["aware"]["ttft_p99"] >= c["flat"]["ttft_p99"]:
+        failures.append(
+            f"network-aware TTFT P99 {c['aware']['ttft_p99']:.4f}s did not "
+            f"improve on flat {c['flat']['ttft_p99']:.4f}s")
+    if c["aware"]["poa_network"] > c["flat"]["poa_network"] + 1e-9:
+        failures.append(
+            f"network-aware PoA-hat {c['aware']['poa_network']:.4f} did "
+            f"not improve on flat {c['flat']['poa_network']:.4f}")
+    if c["aware"]["completed"] != c["flat"]["completed"]:
+        failures.append("modes completed different request counts — the "
+                        "comparison is not like-for-like")
+    return failures
+
+
+def run(smoke: bool = False) -> dict:
+    payload = {"mode": "smoke" if smoke else "full",
+               "congestion": bench_congestion(smoke),
+               "overhead": bench_overhead(smoke),
+               "links": bench_links(smoke)}
+    save_json("BENCH_fabric", payload)
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast scenario variants (CI guard, not a "
+                         "measurement)")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="fail on >2x wall regression vs this baseline "
+                         "JSON, or on a lost congestion win")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    payload = run(smoke=args.smoke)
+    failures = check_win(payload) if args.check else []
+    if args.check:
+        failures += check_regression(payload, args.check)
+    if failures:
+        print("FAIL:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    if args.check:
+        print(f"# win + regression check vs {args.check}: ok",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,19 @@ and, for paged decoders, the page-pool invariants: free list ∪ live page
 tables exactly partitions the pool (P1), no page owned by two live slots
 (P2), released slots hold zero pages (P3).
 
+Fabric (both backends, when a :class:`~repro.serving.fabric.Fabric` is
+attached):
+
+N1  per-link byte conservation: every link's ``bytes_inflight`` equals
+    the recomputed sum over live transmissions whose path crosses it —
+    enqueue/complete/cancel (the drain-protocol refund) must balance;
+    and on the analytic backend no live transmission targets a draining
+    or non-decode worker unless its request was already admitted there
+    before the drain began;
+N2  quote/charge parity: the network-aware router's pure quote replays
+    exactly as the committed transmission's finish time — pricing and
+    charging share one link-scheduling routine.
+
 Replicated control plane (both backends, when ``replica_views`` exist):
 
 R1  bounded staleness: no replica view's age ever exceeds its configured
@@ -110,14 +123,74 @@ def _check_frozen_views(control, frozen, trace: _Trace, where: str) -> None:
         got = v.frozen_state()
         if got != want:
             labels = ("synced_at", "healthy ids", "loads", "regime",
-                      "hash claims")
-            diffs = [labels[i] for i in range(len(labels))
-                     if got[i] != want[i]]
+                      "hash claims", "fabric links")
+            diffs = [labels[i] if i < len(labels) else f"field {i}"
+                     for i in range(max(len(got), len(want)))
+                     if (got[i:i + 1] or None) != (want[i:i + 1] or None)]
             trace.fail(
                 "R2 replica snapshot integrity",
                 f"at {where}: replica {v.index} base snapshot diverged "
                 f"from its sync-time frozen copy in: {', '.join(diffs)} — "
                 f"only sync() may rewrite snapshot state")
+
+
+def _check_fabric(fabric, trace: _Trace, where: str,
+                  live_dsts: Optional[Set[int]] = None,
+                  admitted_rids: Optional[Set] = None) -> None:
+    """N1: recompute every link's ``bytes_inflight`` from the live
+    transmission set and compare to the incrementally-maintained counter
+    — an imbalance means an enqueue/complete/cancel edge (most likely the
+    drain-protocol refund) leaked or double-released bytes.  With
+    ``live_dsts`` (analytic backend), also check that no live
+    transmission still targets a drained destination unless its request
+    was admitted there before the drain began."""
+    expect: Dict[str, int] = {}
+    for txm in fabric.active.values():
+        for name in txm.path:
+            expect[name] = expect.get(name, 0) + txm.size
+        if live_dsts is not None and txm.dst not in live_dsts:
+            if admitted_rids is None or txm.rid not in admitted_rids:
+                trace.fail(
+                    "N1 fabric byte conservation (drain)",
+                    f"at {where}: transmission tid={txm.tid} "
+                    f"(rid={txm.rid}) still in flight toward drained "
+                    f"worker {txm.dst} — the drain protocol must cancel "
+                    f"before re-routing")
+    for name in sorted(fabric.links):
+        link = fabric.links[name]
+        want = expect.get(name, 0)
+        if link.bytes_inflight != want:
+            trace.fail(
+                "N1 fabric byte conservation",
+                f"at {where}: link {name} accounts "
+                f"bytes_inflight={link.bytes_inflight} but live "
+                f"transmissions crossing it sum to {want}")
+
+
+def _wrap_fabric_enqueue(fabric, trace: _Trace):
+    """N2: wrap ``fabric.enqueue`` so every committed transfer is checked
+    against the pure quote taken an instant before — pricing (what the
+    network-aware router sees) and charging (what the request pays) must
+    replay identically."""
+    orig = fabric.enqueue
+
+    def enqueue(rid, src, dst, n_blocks, now):
+        quoted = fabric.quote(src, dst, n_blocks, now)
+        txm = orig(rid, src, dst, n_blocks, now)
+        if txm is not None:
+            trace.add(f"t={now:.4f} xfer rid={rid} {src}->{dst} "
+                      f"{n_blocks}blk finish={txm.finish_t:.4f}")
+            charged = txm.finish_t - now
+            if abs(charged - quoted) > 1e-9:
+                trace.fail(
+                    "N2 fabric quote/charge parity",
+                    f"tid={txm.tid} (rid={rid}) {src}->{dst}: quoted "
+                    f"{quoted:.9f}s but charged {charged:.9f}s — the "
+                    f"router priced a different fabric than the one "
+                    f"that carried the transfer")
+        return txm
+
+    fabric.enqueue = enqueue
 
 
 # -------------------------------------------------------------- analytic ----
@@ -171,6 +244,8 @@ class SimSanitizer:
         sim._new_kvbm = self._wrap_new_kvbm
         for wid in sim.decode_ids:
             self._instrument_kvbm(sim.workers[wid].kvbm)
+        if getattr(sim, "fabric", None) is not None:
+            _wrap_fabric_enqueue(sim.fabric, self.trace)
 
     def _instrument_kvbm(self, kv) -> None:
         """Guard the eviction/refcount edges of one KVBM: demoting or
@@ -300,6 +375,13 @@ class SimSanitizer:
             _check_frozen_views(sim.control, self.view_frozen, self.trace,
                                 where)
 
+        # N1: fabric byte conservation + drain closure over live transfers
+        if getattr(sim, "fabric", None) is not None:
+            live = {wid for wid in sim.decode_ids
+                    if not sim.workers[wid].draining}
+            _check_fabric(sim.fabric, self.trace, where, live_dsts=live,
+                          admitted_rids=set(self.admitted))
+
         # recompute the admitted view once: per-worker running counts and
         # per-(worker, hash) expected pin counts
         running: Dict[int, int] = {}
@@ -412,6 +494,8 @@ class EngineSanitizer:
             self._instrument_decoder(dec)
         self._step = cl.step
         cl.step = self._wrap_step
+        if getattr(cl, "fabric", None) is not None:
+            _wrap_fabric_enqueue(cl.fabric, self.trace)
         if getattr(cl.control, "replica_views", None):
             self._sync_views = cl.control.sync_views
             cl.control.sync_views = self._wrap_sync_views
@@ -508,6 +592,10 @@ class EngineSanitizer:
                      f"of {bound} tick(s)")
             _check_frozen_views(cl.control, self.view_frozen, self.trace,
                                 where)
+
+        # N1: fabric byte conservation (no drain protocol on this backend)
+        if getattr(cl, "fabric", None) is not None:
+            _check_fabric(cl.fabric, self.trace, where)
 
         # E2: slot table ≡ cluster running view.  Every running request
         # owns exactly its recorded slot; every active slot is owned by a

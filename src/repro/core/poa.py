@@ -99,6 +99,11 @@ class CompletedRequest:
     overlap: Sequence[float]     # KV overlap score per worker at routing time
     finish_time: float
     loads: Sequence[float] = ()  # per-worker decode load observed at routing
+    # fourth game (both 0.0 when no fabric is attached): realized fabric
+    # transfer service incl. link queueing, and the uncongested transfer
+    # time of the social optimum's link assignment
+    transfer_wait: float = 0.0
+    transfer_floor: float = 0.0
 
 
 @dataclass
@@ -190,6 +195,15 @@ class PoATracker:
             if o.shape[0] == w:
                 ov[i] = o
         per_w = base_w[None, :] - self.cache_weight * ov   # (n, w)
+        floors = np.asarray([rq.transfer_floor for rq in reqs],
+                            dtype=np.float64)
+        if floors.any():
+            # fourth game: even OPT must move each request's non-resident
+            # KV once, over uncongested links — a per-request constant
+            # added to every column (prices the wire without perturbing
+            # the assignment).  Skipped entirely when no fabric ran, so
+            # fabric=None stays bit-exact.
+            per_w = per_w + floors[:, None]
         scale = 1.0
         if n > cols:
             # truncation: price only the first `cols` requests one-to-one,
@@ -245,6 +259,25 @@ class PoATracker:
         poa = (c_re + floor) / (c_so + floor)
         return {"gp": prefill_workers, "gd": total - prefill_workers,
                 "ve_gp": ve, "so_gp": so, "poa_resource": poa}
+
+    def network_game(self, now: Optional[float] = None) -> dict:
+        """Fourth-game counterfactual: realized transfer wait (fabric
+        service incl. shared-link queueing) over the window, against the
+        social optimum's link assignment — every transfer priced at its
+        uncongested path time (``transfer_floor``).  The ratio is the
+        network PoA-hat: 1.0 when no transfer ever queued behind another,
+        rising as cache-affinity herding serializes transfers on shared
+        NICs.  Floored like :meth:`resource_game`: an idle window with
+        negligible wire time reads ≈ 1, not 0/0."""
+        reqs = list(self._window)
+        if now is not None:
+            reqs = [r for r in reqs if r.finish_time >= now - self.window_s]
+        wait = sum(r.transfer_wait for r in reqs)
+        opt = sum(r.transfer_floor for r in reqs)
+        floor = 1e-4
+        return {"transfer_wait": wait, "transfer_opt": opt,
+                "poa_network": (wait + floor) / (opt + floor),
+                "n": len(reqs)}
 
     def current_poa(self, now: Optional[float] = None) -> float:
         reqs = list(self._window)

@@ -60,6 +60,42 @@ from repro.core.poa import PoATracker
 from repro.core.router import (KvPushRouter, KvRouterConfig, PowerOfTwoRouter,
                                RandomRouter, RoundRobinRouter)
 from repro.core.saturation import DetectorConfig, Regime, SaturationDetector
+from repro.serving.fabric import transfer_block_count
+
+
+def _net_argmin(fabric, cfg, ids, overlaps, loads, total_blocks, now, rng):
+    """Network-aware Eq. 1: the cache-affinity cost plus each candidate's
+    *effective* transfer time quoted from current link queue depths —
+    decode selection as congestion avoidance (the NetKV term).
+
+    ``fabric`` may be the live :class:`~repro.serving.fabric.Fabric` (fresh
+    view) or a frozen :class:`~repro.serving.fabric.FabricSnapshot`
+    (replica view) — both expose ``route_src``/``quote``/``config``."""
+    scale = KvPushRouter.PREFILL_BLOCK_SCALE
+    weight = fabric.config.net_weight
+    src = fabric.route_src(now)
+    costs = []
+    for ov, ld, w in zip(overlaps, loads, ids):
+        blocks = transfer_block_count(total_blocks, ov)
+        costs.append(cfg.overlap_weight * (scale * (1.0 - ov)) + ld
+                     + weight * fabric.quote(src, w, blocks, now))
+    if cfg.temperature <= 0.0 or len(ids) == 1:
+        j = min(range(len(ids)), key=lambda i: (costs[i], ids[i]))
+    else:
+        mn = min(costs)
+        spread = max(max(costs) - mn, 1e-9)
+        z = [(c - mn) / spread for c in costs]
+        ws = [math.exp(-zi / cfg.temperature) for zi in z]
+        tot = sum(ws)
+        r = rng.random() * tot
+        acc = 0.0
+        j = len(ids) - 1
+        for i, w in enumerate(ws):
+            acc += w
+            if r <= acc:
+                j = i
+                break
+    return ids[j], overlaps[j], overlaps
 
 
 class RoutingDecision(NamedTuple):
@@ -104,6 +140,26 @@ class StateView:
         return self._plane.policy.best_worker(
             tokens, router_config_override=cfg, now=now, hashes=hashes)
 
+    def net_best_worker(self, tokens: Sequence[int], cfg, now: float,
+                        hashes: Optional[Sequence[int]]
+                        ) -> Tuple[int, float, List[float]]:
+        """Network-aware selection against live link state (fresh view)."""
+        plane = self._plane
+        router = plane.router
+        ids = router.healthy_ids()
+        overlaps = self.overlap_scores(tokens, ids, now, hashes=hashes)
+        caps = [router.workers[w].capacity for w in ids]
+        if len(set(caps)) <= 1:
+            loads = [float(router.workers[w].active_blocks) for w in ids]
+        else:       # capacity-normalized, mirroring _normalized_load
+            ref = sum(caps) / len(caps)
+            loads = [router.workers[w].active_blocks * (ref / cap)
+                     for w, cap in zip(ids, caps)]
+        total = len(hashes) if hashes is not None else len(
+            block_hashes(tokens))
+        return _net_argmin(plane.fabric, cfg, ids, overlaps, loads, total,
+                           now, plane._net_rng)
+
 
 class ReplicaStateView(StateView):
     """Bounded-staleness replica view: a frozen snapshot of the
@@ -136,6 +192,8 @@ class ReplicaStateView(StateView):
         self._hash_claims: Dict[int, Tuple[int, ...]] = {}
         # local delta: block hash → workers this replica placed since sync
         self._local_claims: Dict[int, List[int]] = {}
+        # frozen fabric link state (None when the plane has no fabric)
+        self._fabric = None
 
     # ------------------------------------------------------------- sync ----
 
@@ -157,15 +215,20 @@ class ReplicaStateView(StateView):
         self._regime = plane.detector.regime
         self._hash_claims = router.indexer.snapshot_claims(now)
         self._local_claims = {}
+        fabric = plane.fabric
+        self._fabric = fabric.freeze() if fabric is not None else None
         self.synced_at = now
 
     def frozen_state(self):
         """Deep-frozen copy of the base snapshot (NOT the local delta) —
         the sanitizer records one per sync and asserts nothing but
         :meth:`sync` ever rewrites it."""
-        return (self.synced_at, tuple(self._ids), tuple(self._loads),
+        base = (self.synced_at, tuple(self._ids), tuple(self._loads),
                 self._regime,
                 tuple(sorted((h, ws) for h, ws in self._hash_claims.items())))
+        if self._fabric is not None:
+            return base + (self._fabric.state_key(),)
+        return base
 
     # ------------------------------------------------------------- reads ----
 
@@ -242,6 +305,22 @@ class ReplicaStateView(StateView):
                     break
         return ids[j], overlaps[j], overlaps
 
+    def net_best_worker(self, tokens: Sequence[int], cfg, now: float,
+                        hashes: Optional[Sequence[int]]
+                        ) -> Tuple[int, float, List[float]]:
+        """Network-aware selection against the *frozen* fabric snapshot
+        taken at the last sync — a replica quotes link queues exactly as
+        stale as the rest of its world (no authoritative reads here)."""
+        ids = self._ids
+        if not ids:
+            raise RuntimeError(f"replica {self.index}: no healthy workers "
+                               f"in view")
+        overlaps = self.overlap_scores(tokens, ids, now, hashes=hashes)
+        total = len(hashes) if hashes is not None else len(
+            block_hashes(tokens))
+        return _net_argmin(self._fabric, cfg, ids, overlaps, self._loads,
+                           total, now, self._rng)
+
     # ------------------------------------------------------------ writes ----
 
     def note_placement(self, worker: int, hashes: Optional[Sequence[int]]
@@ -277,7 +356,20 @@ class ControlPlane:
                  num_prefill: int = 0,
                  log_decisions: bool = False,
                  decision_log_maxlen: Optional[int] = None,
+                 fabric=None,                   # repro.serving.fabric.Fabric
+                 network_aware: bool = False,
                  sanitize: Optional[bool] = None):
+        # Fourth game: an attached Fabric prices P→D transfers on shared
+        # links; network_aware additionally folds each candidate's quoted
+        # transfer time into the routing cost (requires the kv policy —
+        # baselines carry no per-candidate cost vector to extend).
+        self.fabric = fabric
+        self.network_aware = bool(network_aware and fabric is not None)
+        if self.network_aware and routing_policy != "kv":
+            raise ValueError(
+                "network_aware selection requires routing_policy='kv' "
+                f"(got {routing_policy!r})")
+        self._net_rng = random.Random((seed + 1) * 104729)
         self.router = KvPushRouter(num_workers,
                                    router_config or KvRouterConfig(),
                                    seed=seed)
@@ -381,8 +473,12 @@ class ControlPlane:
         """
         cfg = self._last_config = self.active_router_config(now)
         view = self.view
-        worker, overlap, overlaps = view.best_worker(tokens, cfg, now,
-                                                     hashes=hashes)
+        if self.network_aware:
+            worker, overlap, overlaps = view.net_best_worker(
+                tokens, cfg, now, hashes=hashes)
+        else:
+            worker, overlap, overlaps = view.best_worker(tokens, cfg, now,
+                                                         hashes=hashes)
         if self.policy is not self.router:
             ids = (list(live_ids) if live_ids is not None
                    else view.healthy_ids())
@@ -545,16 +641,24 @@ class ReplicatedControlPlane(ControlPlane):
         # the (τ, ω) of the regime it *believes* the cluster is in
         vcfg = cfg if not self.adaptive else (
             self.regime_params.get(view.regime) or self.router.config)
-        stale_w, stale_ov, _ = view.best_worker(tokens, vcfg, now,
-                                                hashes=hashes)
+        if self.network_aware:
+            stale_w, stale_ov, _ = view.net_best_worker(tokens, vcfg, now,
+                                                        hashes=hashes)
+        else:
+            stale_w, stale_ov, _ = view.best_worker(tokens, vcfg, now,
+                                                    hashes=hashes)
         view.note_placement(stale_w, hashes)
         self.replica_logs[r].append(
             RoutingDecision(rid, stale_w, stale_ov, now))
 
         # authoritative fresh pass: agreement probe + PoA counterfactual
         # vector + the state the serialized admission write checks
-        fresh_w, _fresh_ov, overlaps = self.policy.best_worker(
-            tokens, router_config_override=cfg, now=now, hashes=hashes)
+        if self.network_aware:
+            fresh_w, _fresh_ov, overlaps = self.view.net_best_worker(
+                tokens, cfg, now, hashes=hashes)
+        else:
+            fresh_w, _fresh_ov, overlaps = self.policy.best_worker(
+                tokens, router_config_override=cfg, now=now, hashes=hashes)
         ids = self.router.healthy_ids()
         if fresh_w == stale_w:
             self.agree_fresh += 1

@@ -38,6 +38,7 @@ from repro.core.saturation import DetectorConfig
 from repro.models.model import Model
 from repro.serving.control_plane import ControlPlane
 from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.fabric import Fabric, FabricConfig, kv_hop_seconds
 
 
 @dataclass
@@ -57,6 +58,10 @@ class ServeRequest:
     hashes: Tuple[int, ...] = ()
     transfer_blocks: int = 0          # non-resident blocks the hop moved
     transfer_charge: float = 0.0      # seconds charged for that movement
+    # fourth game (0.0 without a fabric): fabric service incl. link
+    # queueing, and the uncongested (OPT) transfer time
+    transfer_wait: float = 0.0
+    transfer_floor: float = 0.0
 
     @property
     def ttft(self) -> float:
@@ -91,10 +96,18 @@ class DisaggregatedCluster:
                  num_pages: Optional[int] = None,
                  replicas: Optional[int] = None,
                  staleness_ticks: int = 0,
+                 fabric: Optional[FabricConfig] = None,
+                 network_aware: bool = False,
                  control: Optional[ControlPlane] = None,
                  sanitize: Optional[bool] = None):
         self.model = model
         self.batch_prefill = batch_prefill
+        # Fourth game: decode NICs 0..N-1 plus one prefill node at wid=N
+        # (the engine runs a single prefill engine); transfers serialize on
+        # the shared links instead of the flat per-block charge.  Only used
+        # when ``control`` is built here — an injected plane brings its own.
+        self.fabric = (Fabric(fabric, num_decode=num_decode, num_prefill=1)
+                       if fabric is not None else None)
         self.prefill = PrefillEngine(model, params, max_len,
                                      cache_entries=prefill_cache_entries,
                                      max_batch=max_prefill_batch)
@@ -125,6 +138,8 @@ class DisaggregatedCluster:
                 cache_ttl=cache_ttl,
                 poa_window_s=60.0, poa_window_count=64,
                 log_decisions=True,
+                fabric=self.fabric,
+                network_aware=network_aware,
                 sanitize=False)   # the cluster attaches its own, richer one
             if replicas is None:
                 self.control = ControlPlane(num_decode, **plane_kw)
@@ -228,7 +243,24 @@ class DisaggregatedCluster:
                 prompt_len=len(req.tokens), max_new=req.max_new_tokens,
                 hashes=req.hashes, src_row=row)
             req.transfer_blocks = moved
-            req.transfer_charge = moved * self.kv_transfer_per_block
+            if self.fabric is not None:
+                # enqueue the sized transmission on the shared links; the
+                # charge is the quoted-and-committed fabric service time
+                # (store-and-forward over NIC/rack/spine incl. queueing)
+                now2 = self._now()
+                src = self.fabric.route_src(now2)
+                txm = self.fabric.enqueue(req.request_id, src, worker,
+                                          moved, now2)
+                if txm is not None:
+                    req.transfer_charge = txm.finish_t - now2
+                    req.transfer_wait = txm.finish_t - txm.enqueue_t
+                    req.transfer_floor = self.fabric.floor_seconds(src,
+                                                                   moved)
+                else:
+                    req.transfer_charge = 0.0
+            else:
+                req.transfer_charge = kv_hop_seconds(
+                    self.kv_transfer_per_block, moved)
             req.first_token_t = self._now()
             req.last_token_t = req.first_token_t
             req.output = [first]
@@ -237,6 +269,10 @@ class DisaggregatedCluster:
     def step(self) -> int:
         """One scheduler tick: admit pending, advance every decode engine.
         Returns number of completed requests this tick."""
+        if self.fabric is not None:
+            # lazy settlement: the engine has no event queue, so landed
+            # transmissions release their link reservations at tick start
+            self.fabric.complete_until(self._now())
         if self.staleness_ticks > 0:
             if self._ticks % self.staleness_ticks == 0:
                 self.control.sync_views(self._now())
@@ -271,7 +307,9 @@ class DisaggregatedCluster:
                         request_id=rid, worker=worker,
                         latency=(req.finish_t - req.submit_t
                                  + req.transfer_charge),
-                        overlap=req.overlaps, finish_time=now))
+                        overlap=req.overlaps, finish_time=now,
+                        transfer_wait=req.transfer_wait,
+                        transfer_floor=req.transfer_floor))
                     completed += 1
         # controller telemetry poll (every tick at test scale)
         ttft_p99 = self.metrics.histogram("ttft", window_s=300.0).p99(self._now())

@@ -104,6 +104,12 @@ class EngineScenarioRunner:
             sim_kw.get("detector_config")
             or DetectorConfig.for_model(scenario.cluster.name))
         cluster_kw.setdefault("cache_ttl", scenario.cluster.cache_ttl)
+        # fabric scenarios carry the FabricConfig in sim_kwargs; the engine
+        # cluster builds its own Fabric instance from the same config
+        if sim_kw.get("fabric") is not None:
+            cluster_kw.setdefault("fabric", sim_kw["fabric"])
+            cluster_kw.setdefault("network_aware",
+                                  sim_kw.get("network_aware", False))
         if model is None:
             cfg = get_reduced(model_name)
             model = build_model(cfg)

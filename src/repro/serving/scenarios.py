@@ -33,6 +33,7 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Mapping, Optional, Tuple
 
 from repro.core.planner import PlannerConfig
+from repro.serving.fabric import FabricConfig
 from repro.serving.simulator import (ClusterConfig, DecodeWorkerSpec,
                                      Simulator)
 from repro.serving.workload import WorkloadConfig
@@ -128,7 +129,8 @@ def build_simulator(name: str, seed: int = 0, **overrides) -> Simulator:
     does not consume is forwarded to ``Scenario.build``."""
     sim_keys = {"router_config", "adaptive", "detector_config",
                 "routing_policy", "regime_params", "planner_config",
-                "lean_completed", "sanitize", "replicas", "staleness"}
+                "lean_completed", "sanitize", "replicas", "staleness",
+                "fabric", "network_aware"}
     sim_kw = {k: overrides.pop(k) for k in list(overrides)
               if k in sim_keys}
     return get_scenario(name, **overrides).build(seed=seed, **sim_kw)
@@ -142,7 +144,8 @@ _ENGINE_KEYS = {"model_name", "num_requests", "input_tokens",
                 "detector_config", "routing_policy", "cache_ttl",
                 "prefill_cache_entries", "kv_transfer_per_block",
                 "batch_prefill", "max_prefill_batch", "decode_impl",
-                "num_pages", "sanitize", "replicas", "staleness_ticks"}
+                "num_pages", "sanitize", "replicas", "staleness_ticks",
+                "fabric", "network_aware"}
 
 
 def build_backend(name: str, backend: str = "analytic", seed: int = 0,
@@ -728,3 +731,62 @@ def _70b_rr(concurrency: int = 64, hold_s: float = 120.0,
         hold_s = 20.0
     kw.setdefault("routing_policy", "round_robin")
     return ramp("llama-3.1-70b", "1P/2D", concurrency, hold_s=hold_s, **kw)
+
+
+# Fabric-aware KV transfer (Game 4) ------------------------------------------
+#
+# Variants that attach the explicit datacenter-fabric model
+# (repro.serving.fabric): every P→D KV transfer becomes a sized
+# transmission serializing store-and-forward across NIC / rack-switch /
+# spine links, and ``network_aware=True`` adds the congestion-aware quote
+# to decode selection.  The congested variant pins a deliberately thin
+# NIC so sync-window herding visibly queues transfers — the regime where
+# network-aware selection beats cache-affinity-only routing
+# (benchmarks/bench_fabric.py gates the win in CI).
+
+def default_fabric() -> FabricConfig:
+    """The calibrated default fabric: 25 Gbps NICs price one full 8-block
+    transfer at ≈ the legacy flat kv_transfer charge (~13 ms), so
+    attaching the fabric preserves the uncongested timing scale."""
+    return FabricConfig()
+
+
+def congested_fabric() -> FabricConfig:
+    """A deliberately thin fabric (8 Gbps NICs, halved switching tiers)
+    for the congestion experiments: herded transfers queue visibly on
+    the victim decode NIC."""
+    return FabricConfig(nic_gbps=8.0, rack_gbps=50.0, spine_gbps=50.0)
+
+
+@_reg("fabric-ramp",
+      "70B 1P/4D closed-loop ramp with the explicit fabric attached "
+      "(store-and-forward KV transmissions over NIC/rack/spine links)")
+def _fabric_ramp(concurrency: int = 64, hold_s: float = 120.0,
+                 fast: bool = False, **kw) -> Scenario:
+    if fast:
+        kw.setdefault("ramp_s", 5.0)
+        hold_s = 20.0
+    kw.setdefault("fabric", default_fabric())
+    return ramp("llama-3.1-70b", "1P/4D", concurrency, hold_s=hold_s, **kw)
+
+
+@_reg("fabric-drain",
+      "elastic 70B pool with fabric attached: Planner flips re-path "
+      "future transfers and the drain protocol cancels in-flight "
+      "transmissions, refunding their reserved link time")
+def _fabric_drain(concurrency: int = 64, hold_s: float = 150.0,
+                  fast: bool = False, **kw) -> Scenario:
+    kw.setdefault("fabric", default_fabric())
+    return _elastic_70b(concurrency=concurrency, hold_s=hold_s, fast=fast,
+                        **kw)
+
+
+@_reg("fabric-scale-64",
+      "scale-64 pool on a deliberately thin fabric (8 Gbps NICs): "
+      "sync-window herding queues KV transfers on shared decode NICs — "
+      "the congested regime where network_aware=True should win")
+def _fabric_scale_64(num_requests: int = 100_000, num_templates: int = 64,
+                     fast: bool = False, **kw) -> Scenario:
+    kw.setdefault("fabric", congested_fabric())
+    return _scale_scenario(64, False, num_requests, num_templates, fast,
+                           **kw)

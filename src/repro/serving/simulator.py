@@ -64,6 +64,8 @@ from repro.core.radix import block_hashes
 from repro.core.router import KvRouterConfig
 from repro.core.saturation import DetectorConfig
 from repro.serving.control_plane import ControlPlane
+from repro.serving.fabric import (Fabric, FabricConfig, kv_hop_seconds,
+                                  transfer_block_count)
 from repro.serving.workload import (WorkloadConfig, template_mix,
                                     template_tokens)
 
@@ -200,6 +202,11 @@ class SimRequest:
     hashes: Tuple[int, ...] = ()          # chained KV block hashes
     onboard_frac: float = 0.0             # blocks onboarded from G2/G3/G4
     onboard_latency: float = 0.0          # Eq. 6 onboarding TTFT add (s)
+    # fabric accounting (fourth game; all zero/None when fabric is off)
+    prefill_worker: int = -1              # wid whose NIC sources the transfer
+    txm: Optional[object] = None          # live Transmission, if any
+    transfer_wait: float = 0.0            # fabric service incl. link queueing
+    transfer_floor: float = 0.0           # uncongested (OPT) transfer time
 
     @property
     def ttft(self) -> float:
@@ -251,6 +258,8 @@ class Simulator:
                  lean_completed: bool = False,
                  replicas: Optional[int] = None,
                  staleness: float = 0.0,
+                 fabric: Optional[FabricConfig] = None,
+                 network_aware: bool = False,
                  sanitize: Optional[bool] = None):
         self.cluster = cluster
         self.workload = workload
@@ -308,6 +317,11 @@ class Simulator:
             self._poa_universe = list(range(nd + npre))
         else:
             self._poa_universe = list(range(nd))
+        # Fourth game: an explicit fabric replaces the flat KV-hop charge —
+        # transfers serialize on shared NIC/rack/spine links and (opt-in)
+        # routing quotes effective transfer times from link queue depths.
+        self.fabric = (Fabric(fabric, num_decode=nd, num_prefill=npre)
+                       if fabric is not None else None)
         plane_kw = dict(
             router_config=router_config,
             routing_policy=routing_policy,
@@ -323,6 +337,8 @@ class Simulator:
             poa_window_s=30.0,
             planner_config=planner_config,
             num_prefill=npre,
+            fabric=self.fabric,
+            network_aware=network_aware,
             sanitize=False)   # the simulator attaches its own, richer one
         if replicas is None:
             self.control = ControlPlane(nd, **plane_kw)
@@ -589,6 +605,7 @@ class Simulator:
     def _on_prefill_busy_done(self, wid: int, req: SimRequest):
         w = self.workers[wid]
         w.busy = False
+        req.prefill_worker = wid     # this NIC sources the KV transfer
         if w.pending_role == DECODE_ROLE:
             # deferred Planner flip: the worker was mid-prefill when the
             # move was decided; it joins the decode pool now that it's idle
@@ -614,6 +631,23 @@ class Simulator:
         self._deliver(req)
 
     def _deliver(self, req: SimRequest):
+        if self.fabric is not None:
+            # the KV starts moving the moment prefill hands it off —
+            # admission slots gate decode, not the wire — so the
+            # transmission enqueues here, before the queue-or-admit split
+            n = transfer_block_count(len(req.hashes), req.overlap)
+            src = (req.prefill_worker if req.prefill_worker >= 0
+                   else self.fabric.route_src(self.now))
+            txm = self.fabric.enqueue(req.rid, src, req.decode_worker, n,
+                                      self.now)
+            req.txm = txm
+            if txm is not None:
+                req.transfer_wait = txm.finish_t - txm.enqueue_t
+                req.transfer_floor = self.fabric.floor_seconds(src, n)
+                self._push(txm.finish_t, "transfer_done", txm)
+            else:
+                req.transfer_wait = 0.0
+                req.transfer_floor = 0.0
         w = self.workers[req.decode_worker]
         if w.running >= w.spec.decode_cap:
             w.transfer_queue.append(req)
@@ -630,8 +664,16 @@ class Simulator:
         # onboarding G2/G3 blocks into HBM delays first token by the
         # per-tier Eq. 6 latency (quoted at scheduling) — cheaper than the
         # full-recompute path a true miss pays in prefill work.
-        transfer = spec.kv_transfer * (1.0 - req.overlap) \
-            + req.onboard_latency
+        if self.fabric is not None:
+            # fabric charge: remaining wire time of the live transmission
+            # (zero if it already landed while the request sat in the
+            # admission queue, or if every block was resident)
+            wire = (max(req.txm.finish_t - self.now, 0.0)
+                    if req.txm is not None else 0.0)
+            transfer = wire + req.onboard_latency
+        else:
+            transfer = kv_hop_seconds(spec.kv_transfer, 1.0 - req.overlap) \
+                + req.onboard_latency
         req.prefill_end = self.now + transfer
         req.decode_start = req.prefill_end
         self.router.indexer.insert(w.wid, req.tokens, self.now,
@@ -665,7 +707,9 @@ class Simulator:
             request_id=str(req.rid), worker=w.wid,
             latency=req.finish_t - req.submit_t,
             overlap=req.overlaps_all, finish_time=self.now,
-            loads=req.loads_at_schedule))
+            loads=req.loads_at_schedule,
+            transfer_wait=req.transfer_wait,
+            transfer_floor=req.transfer_floor))
         if self.lean_completed:
             # the PoA window holds its own reference to the overlap/load
             # vectors; dropping the request's copy bounds memory at
@@ -680,6 +724,11 @@ class Simulator:
             self._finish_flip_to_prefill(w)
         self._maybe_submit()
 
+    def _on_transfer_done(self, txm):
+        """Fabric transmission landed: release its per-link byte
+        reservation (a no-op if the drain protocol already cancelled it)."""
+        self.fabric.complete(txm)
+
     # ------------------------------------------------ Game 1 repartition ----
 
     def _start_drain_to_prefill(self, w: Worker):
@@ -692,6 +741,12 @@ class Simulator:
         stalled = list(w.transfer_queue)
         w.transfer_queue.clear()
         for req in stalled:
+            if self.fabric is not None and req.txm is not None:
+                # transfer refund: release the reserved link capacity
+                # BEFORE re-quoting against the new worker (sanitizer N1
+                # catches transmissions left pointed at a drained worker)
+                self.fabric.cancel(req.txm, self.now)
+                req.txm = None
             self._route(req)
             self._deliver(req)
         if w.running == 0:
@@ -712,6 +767,8 @@ class Simulator:
         self.prefill_ids.append(w.wid)
         self.prefill_ids.sort()
         self.poa.capacities = self._poa_capacities()
+        if self.fabric is not None:
+            self.fabric.set_pool(self.prefill_ids, self.decode_ids)
         self.role_flips.append((self.now, w.wid, "to_prefill"))
         self._dispatch_prefill()     # new prefill capacity is live now
 
@@ -737,6 +794,8 @@ class Simulator:
         self.decode_ids.sort()
         self.router.add_worker(w.wid, float(w.spec.decode_cap))
         self.poa.capacities = self._poa_capacities()
+        if self.fabric is not None:
+            self.fabric.set_pool(self.prefill_ids, self.decode_ids)
         self.role_flips.append((self.now, w.wid, "to_decode"))
 
     def _response_model(self) -> Optional[ResponseModel]:
@@ -842,6 +901,12 @@ class Simulator:
             if model is not None:
                 entry["resource_game"] = self.poa.resource_game(
                     model, len(self.prefill_ids), len(self.workers))
+        if self.fabric is not None:
+            # fourth-game observables: per-link queue depth/utilization and
+            # the windowed network PoA (realized transfer wait vs the
+            # social optimum's uncongested link assignment)
+            entry["links"] = self.fabric.link_stats(self.now)
+            entry["network_game"] = self.poa.network_game(self.now)
         self.poll_log.append(entry)
         for kv in self.kvbm:
             kv.decay()
@@ -915,6 +980,8 @@ class Simulator:
                 self._on_prefill_compute_done(payload)
             elif kind == "decode_done":
                 self._on_decode_done(payload)
+            elif kind == "transfer_done":
+                self._on_transfer_done(payload)
             elif kind == "poll":
                 self._on_poll()
             elif kind == "sync":

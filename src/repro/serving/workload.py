@@ -197,31 +197,85 @@ class WorkloadConfig:
             ArrivalProcess("diurnal", rate=rate, period_s=period_s,
                            amplitude=amplitude), duration_s, **kw)
 
+    @staticmethod
+    def _validate_record(r, where: str) -> None:
+        """One trace record against the JSONL schema; raises ValueError
+        naming the offending record (index, or file:line when loaded from
+        disk) and the exact field that is malformed."""
+        if not isinstance(r, dict):
+            raise ValueError(f"trace {where}: expected an object with an "
+                             f"arrival time 't', got {type(r).__name__}: "
+                             f"{r!r}")
+        if "t" not in r:
+            raise ValueError(f"trace {where}: missing required field 't' "
+                             f"(arrival time in seconds); got fields "
+                             f"{sorted(r)}")
+        t = r["t"]
+        if isinstance(t, bool) or not isinstance(t, (int, float)):
+            raise ValueError(f"trace {where}: 't' must be a number "
+                             f"(seconds), got {t!r}")
+        if not math.isfinite(float(t)) or float(t) < 0.0:
+            raise ValueError(f"trace {where}: 't' must be finite and "
+                             f">= 0, got {t!r}")
+        tpl = r.get("template", 0)
+        if isinstance(tpl, bool) or not isinstance(tpl, int):
+            raise ValueError(f"trace {where}: 'template' must be an "
+                             f"integer id (< 0 samples from popularity), "
+                             f"got {tpl!r}")
+        for key in ("input_tokens", "output_tokens"):
+            if key not in r:
+                continue
+            v = r[key]
+            ok = (not isinstance(v, bool)
+                  and isinstance(v, (int, float))
+                  and float(v).is_integer() and v > 0)
+            if not ok:
+                raise ValueError(f"trace {where}: '{key}' must be a "
+                                 f"positive integer token count, got "
+                                 f"{v!r}")
+
     @classmethod
-    def from_records(cls, records: Sequence[dict], **kw) -> "WorkloadConfig":
-        """Build a trace workload from dicts following the JSONL schema."""
+    def from_records(cls, records: Sequence[dict],
+                     _context: Optional[Sequence[str]] = None,
+                     **kw) -> "WorkloadConfig":
+        """Build a trace workload from dicts following the JSONL schema.
+        Every record is validated first — a malformed entry raises
+        :class:`ValueError` naming the record and field, instead of a
+        KeyError/TypeError from deep inside the simulator."""
         defaults = dict(input_tokens=kw.get("input_tokens", INPUT_TOKENS),
                         output_tokens=kw.get("output_tokens", OUTPUT_TOKENS))
-        entries = tuple(sorted(
-            (TraceEntry(t=float(r["t"]),
-                        template=int(r.get("template", 0)),
-                        input_tokens=int(r.get("input_tokens",
-                                               defaults["input_tokens"])),
-                        output_tokens=int(r.get("output_tokens",
-                                                defaults["output_tokens"])))
-             for r in records), key=lambda e: e.t))
-        return cls(mode="trace", trace=entries, **kw)
+        entries = []
+        for i, r in enumerate(records):
+            where = _context[i] if _context is not None else f"record {i}"
+            cls._validate_record(r, where)
+            entries.append(
+                TraceEntry(t=float(r["t"]),
+                           template=int(r.get("template", 0)),
+                           input_tokens=int(r.get("input_tokens",
+                                                  defaults["input_tokens"])),
+                           output_tokens=int(r.get("output_tokens",
+                                                   defaults["output_tokens"]))))
+        return cls(mode="trace",
+                   trace=tuple(sorted(entries, key=lambda e: e.t)), **kw)
 
     @classmethod
     def from_trace_file(cls, path, **kw) -> "WorkloadConfig":
-        """Load a JSONL trace (see module docstring for the schema)."""
-        records = []
+        """Load a JSONL trace (see module docstring for the schema).
+        Parse and schema errors carry ``path:line`` context."""
+        records: List[dict] = []
+        context: List[str] = []
         with open(path) as f:
-            for line in f:
+            for ln, line in enumerate(f, 1):
                 line = line.strip()
-                if line and not line.startswith("#"):
+                if not line or line.startswith("#"):
+                    continue
+                try:
                     records.append(json.loads(line))
-        return cls.from_records(records, **kw)
+                except json.JSONDecodeError as e:
+                    raise ValueError(f"trace {path}:{ln}: invalid JSON "
+                                     f"({e.msg} at column {e.colno})") from e
+                context.append(f"{path}:{ln}")
+        return cls.from_records(records, _context=context, **kw)
 
     # ----------------------------------------------------------- queries ----
 

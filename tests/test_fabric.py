@@ -1,0 +1,305 @@
+"""Fabric model (fourth game): topology, store-and-forward scheduling,
+quote/charge parity, drain refunds, flat-path pricing parity, and the
+congestion counterfactual the network-aware router is supposed to win.
+"""
+import json
+import math
+
+import pytest
+
+from repro.serving.fabric import (Fabric, FabricConfig, kv_hop_seconds,
+                                  transfer_block_count)
+from repro.serving.scenarios import build_simulator
+
+
+def _fabric(nd=4, npre=2, **kw):
+    return Fabric(FabricConfig(**kw), num_decode=nd, num_prefill=npre)
+
+
+# ------------------------------------------------------- shared pricing ----
+
+
+def test_kv_hop_seconds_is_the_flat_charge():
+    # both backends price the fabric-less hop through this one helper:
+    # the engine passes (per-block seconds, moved blocks), the simulator
+    # (per-block seconds, miss fraction) — same product either way
+    assert kv_hop_seconds(0.012, 3) == 0.012 * 3
+    assert kv_hop_seconds(0.020, 1.0 - 0.75) == 0.020 * 0.25
+    assert kv_hop_seconds(0.012, 0) == 0.0
+
+
+def test_transfer_block_count():
+    assert transfer_block_count(8, 0.0) == 8          # full miss
+    assert transfer_block_count(8, 1.0) == 0          # fully warm
+    assert transfer_block_count(8, 0.5) == 4
+    assert transfer_block_count(0, 0.0) == 0
+    assert transfer_block_count(-3, 0.0) == 0
+    assert transfer_block_count(8, 0.99) == 0         # rounds to zero
+    for total in range(1, 20):
+        for ov in (0.0, 0.1, 0.33, 0.5, 0.9, 1.0):
+            n = transfer_block_count(total, ov)
+            assert 0 <= n <= total
+
+
+def test_sim_flat_path_prices_through_shared_helper(monkeypatch):
+    """Satellite regression: the simulator's fabric-less transfer charge
+    must route through kv_hop_seconds (one pricing helper, both
+    backends) — a reintroduced inline formula breaks this spy."""
+    import repro.serving.simulator as simmod
+    calls = []
+    real = kv_hop_seconds
+
+    def spy(per_block_s, blocks):
+        calls.append((per_block_s, blocks))
+        return real(per_block_s, blocks)
+
+    monkeypatch.setattr(simmod, "kv_hop_seconds", spy)
+    sim = build_simulator("70b-1p2d-ramp", seed=0, fast=True)
+    res = sim.run()
+    assert res.completed and calls
+    per_block = {c[0] for c in calls}
+    specs = {sim.workers[w].spec.kv_transfer for w in sim.decode_ids}
+    assert per_block <= specs                 # priced at the worker's rate
+    assert all(0.0 <= blocks <= 1.0 for _s, blocks in calls)
+
+
+def test_engine_flat_path_prices_through_shared_helper(monkeypatch):
+    """Same spy on the engine backend: per-block rate × integral moved
+    block count, through the same helper."""
+    from repro.serving.scenarios import build_backend
+    import repro.serving.disagg as dmod
+    calls = []
+    real = kv_hop_seconds
+
+    def spy(per_block_s, blocks):
+        calls.append((per_block_s, blocks))
+        return real(per_block_s, blocks)
+
+    monkeypatch.setattr(dmod, "kv_hop_seconds", spy)
+    runner = build_backend("parity-2d-warm", backend="engine", seed=0,
+                           fast=True, num_requests=4)
+    out = runner.run()
+    assert out.requests and calls
+    assert all(s == runner.cluster.kv_transfer_per_block for s, _b in calls)
+    assert all(float(b).is_integer() and b >= 0 for _s, b in calls)
+
+
+# ------------------------------------------------------------ topology ----
+
+
+def test_rack_layout_and_paths():
+    fab = _fabric(nd=12, npre=4, rack_size=8)    # 16 workers, 2 racks
+    assert fab.num_racks == 2
+    assert "spine" in fab.links
+    assert fab.rack_of(0) == 0 and fab.rack_of(7) == 0 and fab.rack_of(8) == 1
+    assert fab.path(3, 3) == []
+    assert fab.path(1, 5) == ["nic:1", "rack:0", "nic:5"]
+    assert fab.path(1, 9) == ["nic:1", "rack:0", "spine", "rack:1", "nic:9"]
+
+
+def test_single_rack_has_no_spine():
+    fab = _fabric(nd=4, npre=2, rack_size=8)
+    assert fab.num_racks == 1
+    assert "spine" not in fab.links
+    assert fab.path(5, 2) == ["nic:5", "rack:0", "nic:2"]
+
+
+def test_default_pool_layout_matches_simulator_convention():
+    fab = _fabric(nd=4, npre=2)
+    assert fab.decode_ids == (0, 1, 2, 3)
+    assert fab.prefill_ids == (4, 5)
+
+
+# ------------------------------------------------ store-and-forward ----
+
+
+def test_uncongested_transfer_is_path_serialization():
+    fab = _fabric(nd=4, npre=2, nic_gbps=25.0, rack_gbps=100.0)
+    n, size = 8, 8 * fab.config.bytes_per_block
+    q = fab.quote(4, 0, n, now=0.0)
+    nic = size / (25.0 * 1e9 / 8)
+    rack = size / (100.0 * 1e9 / 8)
+    assert q == pytest.approx(nic + rack + nic)
+    assert fab.floor_seconds(4, n) == pytest.approx(q)
+
+
+def test_shared_nic_serializes_transfers():
+    fab = _fabric(nd=4, npre=3)
+    t1 = fab.enqueue("a", 4, 0, 8, now=0.0)
+    # second transfer into the SAME decode NIC queues behind the first
+    t2 = fab.enqueue("b", 5, 0, 8, now=0.0)
+    assert t2.finish_t > t1.finish_t
+    # a transfer between DIFFERENT endpoints does not pay that queue
+    t3 = fab.enqueue("c", 6, 1, 8, now=0.0)
+    assert t3.finish_t < t2.finish_t
+
+
+def test_quote_replays_as_charge():
+    fab = _fabric(nd=8, npre=2)
+    now = 0.0
+    for i, (src, dst) in enumerate([(8, 0), (9, 0), (8, 3), (9, 0)]):
+        q = fab.quote(src, dst, 4 + i, now)
+        txm = fab.enqueue(i, src, dst, 4 + i, now)
+        assert txm.finish_t - now == pytest.approx(q, abs=1e-12)
+        now += 0.001
+
+
+def test_byte_conservation_across_lifecycle():
+    fab = _fabric(nd=4, npre=2)
+    t1 = fab.enqueue("a", 4, 0, 8, now=0.0)
+    t2 = fab.enqueue("b", 5, 1, 4, now=0.0)
+    t3 = fab.enqueue("c", 4, 0, 2, now=0.0)
+    for name, link in fab.links.items():
+        want = sum(t.size for t in (t1, t2, t3) if name in t.path)
+        assert link.bytes_inflight == want
+    fab.complete(t1)
+    fab.cancel(t3, now=0.0)
+    for name, link in fab.links.items():
+        want = t2.size if name in t2.path else 0
+        assert link.bytes_inflight == want
+    fab.complete_until(t2.finish_t)           # engine-style lazy settlement
+    assert not fab.active
+    assert all(l.bytes_inflight == 0 for l in fab.links.values())
+    assert (fab.enqueued, fab.completed, fab.cancelled) == (3, 2, 1)
+
+
+def test_cancel_refunds_reserved_link_time():
+    fab = _fabric(nd=4, npre=2)
+    q0 = fab.quote(4, 0, 8, 0.0)
+    txm = fab.enqueue("a", 4, 0, 8, now=0.0)
+    assert fab.quote(4, 0, 8, 0.0) > q0       # reservation visible
+    fab.cancel(txm, now=0.0)                  # nothing transmitted yet
+    assert fab.links["nic:4"].busy_until == pytest.approx(0.0)
+    assert all(l.bytes_inflight == 0 for l in fab.links.values())
+    assert all(abs(l.busy_s) < 1e-12 for l in fab.links.values())
+    # a later arrival re-quotes as if the cancelled transfer never was
+    # (each link refunds back to its segment start, so the staircase
+    # reassembles exactly)
+    assert fab.quote(4, 0, 8, 0.0) == pytest.approx(q0, abs=1e-12)
+
+
+def test_cancel_midflight_keeps_transmitted_time():
+    fab = _fabric(nd=4, npre=2)
+    txm = fab.enqueue("a", 4, 0, 8, now=0.0)
+    mid = txm.finish_t / 2
+    fab.cancel(txm, now=mid)
+    # only the untransmitted residual is refunded; spent time stays spent
+    assert fab.links["nic:4"].busy_until <= txm.segments[0][2]
+    assert all(l.bytes_inflight == 0 for l in fab.links.values())
+    assert fab.links["nic:4"].busy_s >= 0.0
+
+
+def test_route_src_picks_least_queued_prefill_nic():
+    fab = _fabric(nd=4, npre=2)
+    assert fab.route_src(0.0) == 4            # tie: lowest wid
+    fab.enqueue("a", 4, 0, 8, now=0.0)
+    assert fab.route_src(0.0) == 5            # 4's NIC now queued
+
+
+def test_floor_seconds_cross_rack():
+    fab = _fabric(nd=4, npre=8, rack_size=4)  # prefill 4..11, racks 1-2
+    same = fab.floor_seconds(4, 8)            # rack 1... decode rack is 0
+    fab2 = _fabric(nd=8, npre=4, rack_size=4)
+    in_rack = fab2.floor_seconds(4, 8)        # src rack 1, decode racks 0-1
+    cross_only = _fabric(nd=4, npre=4, rack_size=4)
+    far = cross_only.floor_seconds(4, 8)      # src rack 1, decode rack 0
+    assert far > in_rack
+    assert same == far                        # 4 decode ids -> rack 0 only
+
+
+def test_snapshot_quotes_match_frozen_state():
+    fab = _fabric(nd=4, npre=2)
+    fab.enqueue("a", 4, 0, 8, now=0.0)
+    snap = fab.freeze()
+    for dst in range(4):
+        assert snap.quote(4, dst, 8, 0.0) == pytest.approx(
+            fab.quote(4, dst, 8, 0.0))
+    assert snap.route_src(0.0) == fab.route_src(0.0)
+    key = snap.state_key()
+    fab.enqueue("b", 5, 1, 8, now=0.0)        # live fabric moves on...
+    assert snap.state_key() == key            # ...the snapshot must not
+
+
+# ------------------------------------------------------- integration ----
+
+
+def test_fabric_run_emits_link_telemetry_and_network_game():
+    sim = build_simulator("fabric-ramp", seed=0, fast=True)
+    res = sim.run()
+    assert sim.fabric.enqueued > 0
+    assert not sim.fabric.active              # everything settled
+    entry = res.poll_log[-1]
+    assert "links" in entry and "network_game" in entry
+    assert any(v["bytes"] > 0 for v in entry["links"].values())
+    ng = entry["network_game"]
+    assert ng["poa_network"] >= 1.0 - 1e-9
+    assert math.isfinite(ng["poa_network"])
+    json.dumps(res.poll_log)                  # telemetry stays serializable
+
+
+def test_flat_run_has_no_fabric_telemetry():
+    res = build_simulator("70b-1p2d-ramp", seed=0, fast=True).run()
+    for entry in res.poll_log:
+        assert "links" not in entry and "network_game" not in entry
+    assert all(r.transfer_wait == 0.0 and r.transfer_floor == 0.0
+               for r in res.completed)
+
+
+def test_completed_requests_carry_transfer_accounting():
+    sim = build_simulator("fabric-ramp", seed=0, fast=True)
+    res = sim.run()
+    waits = [r.transfer_wait for r in res.completed]
+    floors = [r.transfer_floor for r in res.completed]
+    assert any(w > 0 for w in waits)
+    # realized wait can never beat the uncongested floor
+    assert all(w >= f - 1e-12 for w, f in zip(waits, floors))
+
+
+def test_drain_protocol_cancels_inflight_transfer():
+    """Drive the drain protocol against a live transmission: the stalled
+    request's transfer is refunded, the request re-routes away from the
+    draining worker, and the byte accounting stays green (N1)."""
+    sim = build_simulator("fabric-ramp", seed=0, fast=True, sanitize=True)
+    res = sim.run()
+    fab = sim.fabric
+    victim = sim.workers[sim.decode_ids[0]]
+    req = res.completed[-1]
+    req.decode_worker = victim.wid
+    req.txm = fab.enqueue(req.rid, fab.route_src(sim.now), victim.wid, 4,
+                          sim.now)
+    victim.transfer_queue.append(req)
+    before = fab.cancelled
+    sim._start_drain_to_prefill(victim)
+    assert fab.cancelled == before + 1
+    assert req.decode_worker != victim.wid    # re-routed off the victim
+    sim.sanitizer.check_all("post-drain")     # refund balanced the links
+
+
+def test_network_aware_selection_wins_under_congestion():
+    """The acceptance observable at smoke scale: on the congested fabric
+    scenario, network-aware decode selection strictly reduces realized
+    transfer waiting versus cache-affinity-only routing, and the network
+    PoA-hat drops toward 1."""
+    flat = build_simulator("fabric-scale-64", seed=0, fast=True).run()
+    aware = build_simulator("fabric-scale-64", seed=0, fast=True,
+                            network_aware=True).run()
+    ng_flat = flat.poll_log[-1]["network_game"]
+    ng_aware = aware.poll_log[-1]["network_game"]
+    wait_flat = sum(r.transfer_wait for r in flat.completed)
+    wait_aware = sum(r.transfer_wait for r in aware.completed)
+    assert wait_aware < wait_flat
+    assert ng_aware["poa_network"] <= ng_flat["poa_network"]
+    assert len(aware.completed) == len(flat.completed)
+
+
+def test_replicated_fabric_views_quote_frozen_state():
+    """Replica views score candidates against the fabric snapshot taken
+    at sync — the run completes, settles every transfer, and R2 covers
+    the snapshot's link state (6-tuple frozen_state)."""
+    sim = build_simulator("fabric-scale-64", seed=0, fast=True, replicas=2,
+                          staleness=2.0, network_aware=True, sanitize=True)
+    res = sim.run()
+    sim.sanitizer.check_all("post-run")
+    assert res.completed and not sim.fabric.active
+    for v in sim.control.replica_views:
+        assert len(v.frozen_state()) == 6

@@ -15,6 +15,7 @@ from repro.core.radix import _Node
 from repro.core.router import KvRouterConfig
 from repro.serving.control_plane import ControlPlane, ReplicatedControlPlane
 from repro.serving.engine import Slot
+from repro.serving.fabric import FabricConfig
 from repro.serving.paging import PageAllocator
 from repro.serving.simulator import ClusterConfig, SimRequest, Simulator
 from repro.serving.workload import WorkloadConfig
@@ -498,3 +499,54 @@ def test_engine_snapshot_mutation_fires(replica_cluster):
     with pytest.raises(SanitizeError,
                        match="R2 replica snapshot integrity"):
         replica_cluster.step()
+
+
+# ------------------------------------------------------- N1/N2 fabric -------
+
+
+@pytest.fixture()
+def fsim():
+    """A completed fabric-attached run with instrumented link state."""
+    s = Simulator(ClusterConfig.for_model("llama-3.1-70b", "1P/2D"),
+                  WorkloadConfig.single_level(16, hold_s=4.0),
+                  seed=0, sanitize=True, fabric=FabricConfig())
+    s.run()
+    s.sanitizer.check_all("post-run")        # baseline must be green
+    assert s.fabric.enqueued > 0             # the fabric actually carried KV
+    return s
+
+
+def test_link_byte_drift_fires(fsim):
+    fab = fsim.fabric
+    fab.links["nic:0"].bytes_inflight += fab.config.bytes_per_block
+    with pytest.raises(SanitizeError, match="N1 fabric byte conservation"):
+        fsim.sanitizer.check_all()
+
+
+def test_live_transfer_to_drained_worker_fires(fsim):
+    fab = fsim.fabric
+    dst = fsim.decode_ids[0]
+    # a drain that forgot to cancel: live unadmitted transfer, dst drained
+    fab.enqueue(10**9, fab.prefill_ids[0], dst, 2, fsim.now)
+    fsim.workers[dst].draining = True
+    with pytest.raises(SanitizeError,
+                       match=r"N1 fabric byte conservation \(drain\)"):
+        fsim.sanitizer.check_all()
+
+
+def test_cancel_refund_stays_green(fsim):
+    fab = fsim.fabric
+    txm = fab.enqueue(10**9, fab.prefill_ids[0], fsim.decode_ids[0], 4,
+                      fsim.now)
+    fab.cancel(txm, fsim.now)                # the drain protocol's refund
+    assert fab.cancelled == 1
+    fsim.sanitizer.check_all()               # byte accounting balances
+
+
+def test_quote_charge_drift_fires(fsim):
+    fab = fsim.fabric
+    fab.quote = lambda src, dst, n_blocks, now: 0.0   # stale pricing model
+    with pytest.raises(SanitizeError,
+                       match="N2 fabric quote/charge parity"):
+        fab.enqueue(10**9, fab.prefill_ids[0], fsim.decode_ids[0], 2,
+                    fsim.now)

@@ -1,0 +1,93 @@
+"""Trace-schema validation: malformed records fail fast with ValueErrors
+that name the record (index or file:line) and field, instead of leaking a
+KeyError/TypeError from inside the simulator."""
+import math
+
+import pytest
+
+from repro.serving.workload import WorkloadConfig
+
+
+def test_minimal_record_still_works():
+    wl = WorkloadConfig.from_records([{"t": 1.0}])
+    assert wl.mode == "trace"
+    assert wl.trace[0].t == 1.0
+    assert wl.trace[0].template == 0
+
+
+def test_records_are_sorted_by_arrival():
+    wl = WorkloadConfig.from_records([{"t": 2.0}, {"t": 0.5}, {"t": 1.0}])
+    assert [e.t for e in wl.trace] == [0.5, 1.0, 2.0]
+
+
+def test_empty_trace_allowed():
+    assert WorkloadConfig.from_records([]).trace == ()
+
+
+def test_missing_t_names_record_and_field():
+    with pytest.raises(ValueError, match=r"record 1.*missing required "
+                                         r"field 't'"):
+        WorkloadConfig.from_records([{"t": 0.0}, {"template": 2}])
+
+
+def test_non_numeric_t_rejected():
+    with pytest.raises(ValueError, match=r"record 0.*'t' must be a number"):
+        WorkloadConfig.from_records([{"t": "0.5"}])
+    with pytest.raises(ValueError, match=r"'t' must be a number"):
+        WorkloadConfig.from_records([{"t": True}])
+
+
+def test_negative_and_non_finite_t_rejected():
+    for bad in (-0.1, math.inf, math.nan):
+        with pytest.raises(ValueError, match=r"finite and >= 0"):
+            WorkloadConfig.from_records([{"t": bad}])
+
+
+def test_non_object_record_rejected():
+    with pytest.raises(ValueError, match=r"record 2.*expected an object"):
+        WorkloadConfig.from_records([{"t": 0.0}, {"t": 1.0}, [1.0]])
+
+
+def test_bad_template_rejected():
+    with pytest.raises(ValueError, match=r"'template' must be an integer"):
+        WorkloadConfig.from_records([{"t": 0.0, "template": "warm"}])
+    # negative template ids are legal: sample from popularity
+    wl = WorkloadConfig.from_records([{"t": 0.0, "template": -1}])
+    assert wl.trace[0].template == -1
+
+
+@pytest.mark.parametrize("key", ["input_tokens", "output_tokens"])
+@pytest.mark.parametrize("bad", [0, -4, 1.5, "128", False])
+def test_non_positive_token_counts_rejected(key, bad):
+    with pytest.raises(ValueError,
+                       match=rf"'{key}' must be a positive integer"):
+        WorkloadConfig.from_records([{"t": 0.0, key: bad}])
+
+
+def test_integral_float_token_count_accepted():
+    wl = WorkloadConfig.from_records([{"t": 0.0, "input_tokens": 96.0}])
+    assert wl.trace[0].input_tokens == 96
+
+
+def test_trace_file_roundtrip_with_comments(tmp_path):
+    p = tmp_path / "trace.jsonl"
+    p.write_text('# comment\n{"t": 0.0, "template": 1}\n\n'
+                 '{"t": 0.5, "input_tokens": 64}\n')
+    wl = WorkloadConfig.from_trace_file(p)
+    assert len(wl.trace) == 2
+    assert wl.trace[1].input_tokens == 64
+
+
+def test_trace_file_json_error_carries_line(tmp_path):
+    p = tmp_path / "trace.jsonl"
+    p.write_text('{"t": 0.0}\n{"t": oops}\n')
+    with pytest.raises(ValueError, match=r"trace.jsonl:2: invalid JSON"):
+        WorkloadConfig.from_trace_file(p)
+
+
+def test_trace_file_schema_error_carries_line(tmp_path):
+    p = tmp_path / "trace.jsonl"
+    p.write_text('# header\n{"t": 0.0}\n{"t": -3.0}\n')
+    with pytest.raises(ValueError, match=r"trace.jsonl:3: 't' must be "
+                                         r"finite and >= 0"):
+        WorkloadConfig.from_trace_file(p)
